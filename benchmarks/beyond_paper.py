@@ -1,0 +1,81 @@
+"""Beyond-paper experiments:
+
+1. **Topological-order search** (the paper's §7.1 future work): how much
+   does re-ordering the op schedule shrink the offsets footprint on the
+   paper's six networks?
+2. **Exact optimality gap**: branch-and-bound optima on random small
+   instances vs each greedy strategy (the paper only reports distance to
+   its lower *bounds*, which may be unachievable).
+"""
+
+from __future__ import annotations
+
+import random
+import time
+
+from repro.core import offsets, optimal, shared_objects
+from repro.core.order_search import memory_aware_topo_order, simulated_annealing_order
+from repro.core.records import TensorUsageRecord, offsets_lower_bound
+from repro.models.convnets import PAPER_NETWORKS
+
+MB = 2**20
+
+
+def order_search(emit=print) -> None:
+    emit("name,us_per_call,derived")
+    for net, fn in PAPER_NETWORKS.items():
+        g = fn()
+        base = offsets.greedy_by_size_offsets(g.usage_records()).total_size
+        t0 = time.perf_counter()
+        g2 = memory_aware_topo_order(g)
+        greedy_total = offsets.greedy_by_size_offsets(g2.usage_records()).total_size
+        t1 = time.perf_counter()
+        g3 = simulated_annealing_order(g, iters=600, seed=0)
+        sa_total = offsets.greedy_by_size_offsets(g3.usage_records()).total_size
+        t2 = time.perf_counter()
+        emit(
+            f"order_search_{net},{(t2 - t0) * 1e6:.0f},"
+            f"fixed={base / MB:.3f}MiB memaware={greedy_total / MB:.3f} "
+            f"({(t1 - t0) * 1e3:.0f}ms) anneal={sa_total / MB:.3f} "
+            f"({(t2 - t1) * 1e3:.0f}ms) "
+            f"best_delta={(base - min(greedy_total, sa_total)) / MB:+.3f}"
+        )
+
+
+def optimality_gap(n_instances: int = 40, n_tensors: int = 9, emit=print) -> None:
+    emit("name,us_per_call,derived")
+    rng = random.Random(0)
+    sums = {"gbs_off": 0.0, "gbb_off": 0.0, "gbs_so": 0.0, "gbsi_so": 0.0, "gbb_so": 0.0}
+    exact_off = exact_so = 0
+    t0 = time.perf_counter()
+    for i in range(n_instances):
+        recs = []
+        n_ops = 8
+        for t in range(n_tensors):
+            a = rng.randrange(n_ops - 1)
+            b = min(a + rng.randrange(1, 4), n_ops - 1)
+            recs.append(TensorUsageRecord(a, b, 64 * rng.randrange(1, 64), tensor_id=t))
+        opt_off = optimal.optimal_offsets_total(recs)
+        opt_so = optimal.optimal_shared_objects_total(recs)
+        gbs_o = offsets.greedy_by_size_offsets(recs).total_size
+        gbb_o = offsets.greedy_by_breadth_offsets(recs).total_size
+        gbs_s = shared_objects.greedy_by_size(recs).total_size
+        gbsi_s = shared_objects.greedy_by_size_improved(recs).total_size
+        gbb_s = shared_objects.greedy_by_breadth(recs).total_size
+        sums["gbs_off"] += gbs_o / opt_off
+        sums["gbb_off"] += gbb_o / opt_off
+        sums["gbs_so"] += gbs_s / opt_so
+        sums["gbsi_so"] += gbsi_s / opt_so
+        sums["gbb_so"] += gbb_s / opt_so
+        exact_off += gbs_o == opt_off
+        exact_so += gbsi_s == opt_so
+    dt = (time.perf_counter() - t0) * 1e6 / n_instances
+    for k, v in sums.items():
+        emit(f"optgap_{k},{dt:.0f},mean_ratio={v / n_instances:.4f}")
+    emit(f"optgap_exact,{dt:.0f},gbs_off_optimal={exact_off}/{n_instances} "
+         f"gbsi_so_optimal={exact_so}/{n_instances}")
+
+
+if __name__ == "__main__":
+    order_search()
+    optimality_gap()

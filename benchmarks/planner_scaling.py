@@ -1,0 +1,37 @@
+"""Planner runtime scaling — validates the paper's O(k·n²)/O(k·n·log n)
+complexity discussion on synthetic graphs of growing size."""
+
+from __future__ import annotations
+
+import random
+import time
+
+from repro.core import offsets, shared_objects
+from repro.core.records import TensorUsageRecord
+
+
+def synth_records(n: int, seed: int = 0) -> list[TensorUsageRecord]:
+    rng = random.Random(seed)
+    recs = []
+    n_ops = max(n, 2)
+    for i in range(n):
+        a = rng.randrange(n_ops - 1)
+        b = min(a + rng.randrange(1, 8), n_ops - 1)
+        recs.append(
+            TensorUsageRecord(a, b, rng.randrange(1, 1 << 20) * 64, tensor_id=i)
+        )
+    return recs
+
+
+def run(emit=print) -> None:
+    emit("name,us_per_call,derived")
+    for n in (100, 300, 1000, 3000):
+        recs = synth_records(n)
+        for name, fn in (
+            ("gbs_shared_objects", shared_objects.greedy_by_size),
+            ("gbs_offsets", offsets.greedy_by_size_offsets),
+        ):
+            t0 = time.perf_counter()
+            total = fn(recs).total_size
+            dt = (time.perf_counter() - t0) * 1e6
+            emit(f"{name}_n{n},{dt:.0f},total={total}")

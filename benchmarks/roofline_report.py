@@ -1,0 +1,85 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from dryrun JSONs.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun_*.json
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def load(paths: list[str]) -> list[dict]:
+    # later files supersede earlier ones per (arch, shape, mesh) — re-run
+    # sweeps (post-optimization) are named to sort after the originals
+    by_key: dict[tuple, dict] = {}
+    for p in paths:
+        for r in json.load(open(p)):
+            by_key[(r["arch"], r["shape"], r["mesh"])] = r
+    rows = list(by_key.values())
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9), r["mesh"]))
+    return rows
+
+
+def fmt(v, digits=3):
+    if v is None:
+        return "—"
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) < 1e-4 or abs(v) >= 1e5:
+            return f"{v:.2e}"
+        return f"{v:.{digits}f}"
+    return str(v)
+
+
+def render(rows: list[dict], single_pod_only_roofline: bool = True) -> str:
+    out = []
+    out.append("### Dry-run status (10 arch × 4 shapes × 2 meshes)\n")
+    out.append("| arch | shape | 16x16 | 2x16x16 |")
+    out.append("|---|---|---|---|")
+    by_key: dict[tuple, dict] = {}
+    for r in rows:
+        by_key[(r["arch"], r["shape"], r["mesh"])] = r
+    archs = sorted({r["arch"] for r in rows})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    for a in archs:
+        for s in shapes:
+            cells = []
+            for m in ("16x16", "2x16x16"):
+                r = by_key.get((a, s, m))
+                if r is None:
+                    cells.append("—")
+                elif r["status"] == "ok":
+                    cells.append(f"ok ({r['wall_s']:.0f}s)")
+                elif r["status"] == "skipped":
+                    cells.append("skip")
+                else:
+                    cells.append("**ERROR**")
+            out.append(f"| {a} | {s} | {cells[0]} | {cells[1]} |")
+    out.append("")
+    out.append("### Roofline terms (single-pod 16x16, per chip, seconds/step)\n")
+    out.append(
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "HLO GF | HBM GB | coll GB | model/HLO flops | peak mem GB |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] != "ok" or (single_pod_only_roofline and r["mesh"] != "16x16"):
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(r['compute_s'])} | "
+            f"{fmt(r['memory_s'])} | {fmt(r['collective_s'])} | "
+            f"**{r['dominant']}** | {fmt(r['hlo_gflops'], 0)} | "
+            f"{fmt(r['hbm_gb'], 1)} | {fmt(r['coll_gb'], 2)} | "
+            f"{fmt(r['model_flops_ratio'], 3)} | {fmt(r['peak_mem_gb'], 2)} |"
+        )
+    out.append("")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    paths = sys.argv[1:] or sorted(glob.glob("results/dryrun_*.json"))
+    print(render(load(paths)))

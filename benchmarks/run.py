@@ -1,0 +1,38 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV
+# blocks plus the side-by-side paper comparison for Tables 1 and 2.
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import planner_scaling, transformer_footprint
+    from benchmarks.tables import (
+        table1_shared_objects,
+        table2_offsets,
+        validate_paper_claims,
+    )
+
+    print("# === Table 1: Shared Objects (paper Table 1) ===")
+    t1 = table1_shared_objects()
+    print("# === Table 2: Offset Calculation (paper Table 2) ===")
+    t2 = table2_offsets()
+    print("# === paper-claim validation ===")
+    failures = validate_paper_claims(t1, t2)
+    print("# === planner runtime scaling ===")
+    planner_scaling.run()
+    print("# === planner on the 10 assigned architectures (decode step) ===")
+    transformer_footprint.run()
+    print("# === beyond paper: order search (paper §7.1) + optimality gap ===")
+    from benchmarks import beyond_paper
+
+    beyond_paper.order_search()
+    beyond_paper.optimality_gap()
+    if failures:
+        print(f"# {len(failures)} claim checks failed", file=sys.stderr)
+        sys.exit(1)
+    print("# all paper-claim checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""The paper's planner applied to the assigned transformer architectures.
+
+Beyond-paper experiment: extract tensor usage records from the decode-step
+jaxpr of each (reduced) assigned architecture, plan with every strategy,
+and compare against the naive footprint and XLA's own temp allocation for
+the same program. Shows the planner is architecture-agnostic (dense, MoE,
+SSM, hybrid, VLM) — cf. DESIGN.md §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, get_reduced
+from repro.core.planner import plan_graph
+from repro.models.api import Model
+from repro.trace.jaxpr_liveness import trace_graph
+
+MB = 2**20
+
+
+def run(emit=print) -> None:
+    emit("name,us_per_call,derived")
+    for arch in ARCH_IDS:
+        cfg = get_reduced(arch)
+        model = Model.for_config(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        B, T = 2, 64
+        caches = model.init_cache(B, T)
+        tok = jnp.zeros((B, 1), jnp.int32)
+        pos = jnp.zeros((B,), jnp.int32)
+        act = jnp.ones((B,), bool)
+
+        def step(p, t, c, po, a):
+            return model.decode_step(p, t, c, po, active=a)
+
+        graph = trace_graph(step, params, tok, caches, pos, act,
+                            name=f"{arch}-decode")
+        t0 = time.perf_counter()
+        plan = plan_graph(graph, mode="offsets", strategy="auto")
+        dt = (time.perf_counter() - t0) * 1e6
+        xla_temp = ""
+        try:
+            compiled = jax.jit(step).lower(params, tok, caches, pos, act).compile()
+            ma = compiled.memory_analysis()
+            xla_temp = f"{getattr(ma, 'temp_size_in_bytes', 0) / MB:.3f}"
+        except Exception:
+            pass
+        emit(
+            f"plan_{arch},{dt:.0f},"
+            f"plan={plan.total_size / MB:.3f}MiB naive={plan.naive_size / MB:.3f} "
+            f"lb={plan.lower_bound / MB:.3f} xla_temp={xla_temp} "
+            f"reduction={plan.reduction_vs_naive:.2f}x"
+        )

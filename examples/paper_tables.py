@@ -1,0 +1,17 @@
+"""Reproduce the paper's Tables 1 & 2 and print them side by side with
+the published numbers (deliverable (b)/(d)).
+
+    PYTHONPATH=src:. python examples/paper_tables.py
+"""
+
+from benchmarks.tables import (
+    table1_shared_objects,
+    table2_offsets,
+    validate_paper_claims,
+)
+
+if __name__ == "__main__":
+    t1 = table1_shared_objects()
+    t2 = table2_offsets()
+    failures = validate_paper_claims(t1, t2)
+    raise SystemExit(1 if failures else 0)

@@ -1,0 +1,46 @@
+"""Quickstart: plan ANY JAX function's intermediate-tensor memory.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.planner import plan_graph, plan_records
+from repro.models.convnets import mobilenet_v1
+from repro.runtime.executor import ArenaExecutor
+from repro.trace.jaxpr_liveness import trace_graph
+
+
+def my_model(x, w1, w2, w3):
+    h = jax.nn.relu(x @ w1)
+    h = jax.nn.relu(h @ w2)
+    return jax.nn.softmax(h @ w3, axis=-1)
+
+
+def main():
+    # 1. The paper's planner on MobileNet v1 (paper Table 2 row 1)
+    g = mobilenet_v1()
+    plan = plan_graph(g, mode="offsets", strategy="greedy_by_size")
+    print("MobileNet v1:", plan.summary())
+
+    # 2. Any JAX function: trace -> usage records -> plan
+    args = (jnp.ones((32, 256)), jnp.ones((256, 512)),
+            jnp.ones((512, 512)), jnp.ones((512, 10)))
+    graph = trace_graph(my_model, *args)
+    plan = plan_graph(graph)
+    print("my_model:", plan.summary())
+
+    # 3. Execute with REAL buffer reuse: one flat arena, planned offsets
+    ex = ArenaExecutor(my_model, *args)
+    out = ex(*args)
+    ref = my_model(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+    print(f"arena executor: {ex.stats.arena_bytes / 2**20:.3f} MiB arena vs "
+          f"{ex.stats.naive_peak_bytes / 2**20:.3f} MiB naive "
+          f"({ex.stats.reduction:.2f}x smaller), outputs match jit")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""End-to-end serving driver (deliverable (b)): thin wrapper over
+``repro.launch.serve`` — batched requests against a small model with the
+paper's memory planner reporting the decode-step footprint.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-2.7b
+"""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""End-to-end training driver (deliverable (b)): train a reduced
+architecture for a few hundred steps on the synthetic pipeline; loss must
+drop well below ln(vocab).
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen3-0.6b --steps 200
+"""
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

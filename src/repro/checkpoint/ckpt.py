@@ -1,0 +1,47 @@
+"""Flat-npz checkpointing for param/optimizer pytrees.
+
+Pure numpy (no orbax offline): pytrees are flattened with stable
+path-derived keys; restore round-trips dtypes and tree structure. Suited
+to single-host save/restore and the tests; the launcher saves params +
+optimizer state + step + data-pipeline cursor (exact resume).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _keys(tree: Any) -> list[str]:
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [jax.tree_util.keystr(p) for p, _ in paths]
+
+
+def save(path: str, tree: Any, meta: dict | None = None) -> None:
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    keys = _keys(tree)
+    arrays = {f"arr_{i}": np.asarray(x) for i, x in enumerate(flat)}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **arrays)
+    os.replace(tmp, path + ".npz" if not path.endswith(".npz") else path)
+    real = path if path.endswith(".npz") else path + ".npz"
+    with open(real + ".meta.json", "w") as f:
+        json.dump({"keys": keys, "meta": meta or {}}, f)
+
+
+def restore(path: str, like: Any) -> tuple[Any, dict]:
+    real = path if path.endswith(".npz") else path + ".npz"
+    data = np.load(real)
+    with open(real + ".meta.json") as f:
+        info = json.load(f)
+    flat_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = _keys(like)
+    if keys != info["keys"]:
+        raise ValueError("checkpoint tree structure mismatch")
+    flat = [data[f"arr_{i}"].astype(np.asarray(x).dtype) for i, x in enumerate(flat_like)]
+    return jax.tree_util.tree_unflatten(treedef, flat), info["meta"]

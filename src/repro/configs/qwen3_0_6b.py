@@ -1,0 +1,10 @@
+"""qwen3-0.6b — dense, GQA, qk-norm [hf:Qwen/Qwen3-8B family]."""
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="qwen3-0.6b", family="dense", source="hf:Qwen/Qwen3-8B",
+    d_model=1024, n_heads=16, n_kv_heads=8, d_ff=3072, vocab=151936,
+    head_dim=64, qk_norm=True, act="silu", rope_theta=1_000_000.0,
+    period=(LayerSpec(mixer="attn", ffn="mlp"),), n_periods=28,
+)
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,52 @@
+"""Core memory-planning library (the paper's contribution).
+
+Public API:
+    records      — usage records, profiles, breadths, lower bounds
+    shared_objects — Greedy-by-Size / -Improved / Greedy-by-Breadth (paper §4)
+    offsets      — Greedy-by-Size / Greedy-by-Breadth offsets (paper §5)
+    baselines    — naive, TFLite Greedy, min-cost flow, strip packing
+    planner      — MemoryPlan facade (auto strategy selection per paper §6)
+    optimal      — exact branch-and-bound (beyond paper)
+    order_search — topological-order optimization (paper §7.1 future work)
+"""
+
+from repro.core.graph import Graph, GraphBuilder, Op, TensorSpec
+from repro.core.planner import (
+    MemoryPlan,
+    OFFSET_STRATEGIES,
+    SHARED_OBJECT_STRATEGIES,
+    plan_graph,
+    plan_records,
+)
+from repro.core.records import (
+    TensorUsageRecord,
+    align,
+    make_records,
+    naive_consumption,
+    offsets_lower_bound,
+    operator_breadths,
+    operator_profiles,
+    positional_maximums,
+    shared_objects_lower_bound,
+)
+
+__all__ = [
+    "Graph",
+    "GraphBuilder",
+    "Op",
+    "TensorSpec",
+    "MemoryPlan",
+    "OFFSET_STRATEGIES",
+    "SHARED_OBJECT_STRATEGIES",
+    "plan_graph",
+    "plan_records",
+    "TensorUsageRecord",
+    "align",
+    "make_records",
+    "naive_consumption",
+    "offsets_lower_bound",
+    "operator_breadths",
+    "operator_profiles",
+    "positional_maximums",
+    "shared_objects_lower_bound",
+]

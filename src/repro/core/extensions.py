@@ -1,0 +1,76 @@
+"""Beyond-paper strategies.
+
+``greedy_by_conflict``: the paper orders by size (GBS) or operator breadth
+(GBB). Interval-graph coloring theory suggests a third signal: a tensor's
+*conflict mass* — the total size of tensors whose intervals overlap it —
+measures how constrained its placement is. Ordering by (conflict mass,
+size) descending and assigning best-fit objects places the most
+constrained tensors while the object set is still flexible.
+
+``offsets_best_of_all``: portfolio planner — run every offsets strategy
+(ours + baselines + converted shared-objects solutions) and keep the
+minimum; generalizes the paper's §6 "evaluate both" advice.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core import baselines, offsets, shared_objects
+from repro.core.offsets import OffsetAssignment, from_shared_objects
+from repro.core.records import TensorUsageRecord
+from repro.core.shared_objects import (
+    SharedObject,
+    SharedObjectsAssignment,
+    _create_object,
+    _new_assignment,
+)
+
+
+def greedy_by_conflict(
+    records: Sequence[TensorUsageRecord],
+) -> SharedObjectsAssignment:
+    records = list(records)
+    conflict = {r.tensor_id: 0 for r in records}
+    for i, a in enumerate(records):
+        for b in records[i + 1 :]:
+            if a.overlaps(b):
+                conflict[a.tensor_id] += b.size
+                conflict[b.tensor_id] += a.size
+    order = sorted(
+        records,
+        key=lambda r: (-(conflict[r.tensor_id] + r.size), -r.size, r.tensor_id),
+    )
+    asn = _new_assignment("greedy_by_conflict")
+    for rec in order:
+        best: SharedObject | None = None
+        for obj in asn.objects:
+            if not obj.fits(rec):
+                continue
+            if best is None:
+                best = obj
+            elif best.size < rec.size:
+                if obj.size > best.size:
+                    best = obj
+            elif rec.size <= obj.size < best.size:
+                best = obj
+        if best is None:
+            best = _create_object(asn, rec)
+        best.assign(rec)
+        asn.assignment[rec.tensor_id] = best.object_id
+    return asn
+
+
+def offsets_best_of_all(
+    records: Sequence[TensorUsageRecord],
+) -> OffsetAssignment:
+    cands = [
+        offsets.greedy_by_size_offsets(records),
+        offsets.greedy_by_breadth_offsets(records),
+        baselines.strip_packing_bestfit(records),
+        baselines.tflite_greedy_in_order_offsets(records),
+        from_shared_objects(shared_objects.greedy_by_size_improved(records)),
+        from_shared_objects(greedy_by_conflict(records)),
+    ]
+    best = min(cands, key=lambda a: a.total_size)
+    return OffsetAssignment("best_of_all:" + best.strategy, best.offsets, best.total_size)

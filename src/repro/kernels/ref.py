@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness reference)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_decode_ref(
+    q: jax.Array,  # (B, KV, G, D)
+    k_cache: jax.Array,  # (B, T, KV, D)
+    v_cache: jax.Array,  # (B, T, KV, D)
+    lengths: jax.Array,  # (B,)
+) -> jax.Array:
+    B, KV, G, D = q.shape
+    T = k_cache.shape[1]
+    scale = 1.0 / (D ** 0.5)
+    s = jnp.einsum(
+        "bkgd,btkd->bkgt",
+        q.astype(jnp.float32) * scale,
+        k_cache.astype(jnp.float32),
+    )
+    mask = jnp.arange(T)[None, None, None, :] < lengths[:, None, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def ssd_chunk_ref(
+    x: jax.Array,  # (B, L, H, P)
+    dt: jax.Array,  # (B, L, H) fp32 (already softplus'd)
+    dA: jax.Array,  # (B, L, H) fp32 (dt * A, negative)
+    Bm: jax.Array,  # (B, L, H, N) — B projected, broadcast to heads
+    Cm: jax.Array,  # (B, L, H, N)
+    state: jax.Array,  # (B, H, P, N) incoming inter-chunk state
+) -> tuple[jax.Array, jax.Array]:
+    """One SSD chunk: returns (y (B,L,H,P), new_state (B,H,P,N))."""
+    L = x.shape[1]
+    cum = jnp.cumsum(dA, axis=1)  # (B,L,H)
+    total = cum[:, -1]  # (B,H)
+    seg = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Lq,Lk,H)
+    causal = jnp.tril(jnp.ones((L, L), bool))[None, :, :, None]
+    decay = jnp.exp(jnp.where(causal, seg, -jnp.inf))
+    qk = jnp.einsum("blhn,bmhn->blmh", Cm.astype(jnp.float32), Bm.astype(jnp.float32))
+    W = qk * decay * dt[:, None, :, :]
+    y_intra = jnp.einsum("blmh,bmhp->blhp", W, x.astype(jnp.float32))
+    y_inter = jnp.einsum(
+        "blhn,bhpn->blhp",
+        Cm.astype(jnp.float32) * jnp.exp(cum)[..., None],
+        state.astype(jnp.float32),
+    )
+    rem = jnp.exp(total[:, None, :] - cum) * dt  # (B,L,H)
+    dBx = jnp.einsum(
+        "blhn,blhp->bhpn", Bm.astype(jnp.float32) * rem[..., None],
+        x.astype(jnp.float32),
+    )
+    new_state = state.astype(jnp.float32) * jnp.exp(total)[..., None, None] + dBx
+    return (y_intra + y_inter).astype(x.dtype), new_state.astype(state.dtype)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: one Mamba2 SSD chunk (within-chunk + state update).
+
+Grid (B, H): each program owns one (batch, head) pair and computes the
+full L×L decay-weighted attention-like term plus the inter-chunk state
+contribution in VMEM. L is the SSD chunk length (≤256), P = head dim,
+N = state dim — the (L,L) weight tile, (L,P) x tile and (P,N) state tile
+all fit VMEM simultaneously (≈ (256² + 256·64 + 64·128)·4B ≈ 0.3 MiB +
+double-buffering), MXU-aligned at 128 where it matters.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, dA_ref, b_ref, c_ref, s_ref, y_ref, ns_ref):
+    x = x_ref[0, :, 0].astype(jnp.float32)  # (L, P)
+    dt = dt_ref[0, :, 0]  # (L,)
+    dA = dA_ref[0, :, 0]  # (L,)
+    Bm = b_ref[0, :, 0].astype(jnp.float32)  # (L, N)
+    Cm = c_ref[0, :, 0].astype(jnp.float32)  # (L, N)
+    state = s_ref[0, 0].astype(jnp.float32)  # (P, N)
+
+    L = x.shape[0]
+    cum = jnp.cumsum(dA)  # (L,)
+    total = cum[-1]
+    seg = cum[:, None] - cum[None, :]  # (Lq, Lk)
+    row = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    seg = jnp.where(row >= col, seg, -jnp.inf)
+    decay = jnp.exp(seg)
+    qk = Cm @ Bm.T  # (Lq, Lk)
+    W = qk * decay * dt[None, :]
+    y_intra = W @ x  # (L, P)
+    y_inter = (Cm * jnp.exp(cum)[:, None]) @ state.T  # (L, P)
+    y_ref[0, :, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    rem = jnp.exp(total - cum) * dt  # (L,)
+    dBx = x.T @ (Bm * rem[:, None])  # (P, N)
+    ns_ref[0, 0] = (state * jnp.exp(total) + dBx).astype(ns_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(
+    x: jax.Array,  # (B, L, H, P)
+    dt: jax.Array,  # (B, L, H) fp32
+    dA: jax.Array,  # (B, L, H) fp32
+    Bm: jax.Array,  # (B, L, H, N)
+    Cm: jax.Array,  # (B, L, H, N)
+    state: jax.Array,  # (B, H, P, N)
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    grid = (B, H)
+    y, ns = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, L, 1), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1, L, 1), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1, L, 1, N), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, L, 1, N), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), state.dtype),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(x, dt, dA, Bm, Cm, state)
+    return y, ns

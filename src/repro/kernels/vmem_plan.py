@@ -1,0 +1,75 @@
+"""VMEM budgeting for the Pallas kernels via the paper's planner.
+
+A Pallas grid step is a micro-scale instance of the paper's problem: the
+kernel's tiles (q block, double-buffered K/V blocks, online-softmax
+scratch) are tensors with usage intervals over the pipeline stages; VMEM
+(~16 MiB/core on v5e) is the arena. ``plan_flash_decode_vmem`` builds the
+usage records for one grid step (with the next step's K/V prefetch
+overlapping — the double buffer), runs Offset Calculation, and returns
+the planned VMEM footprint. ``ops.flash_decode_auto`` block sizing is
+checked against this in tests/test_vmem_plan.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.planner import MemoryPlan, plan_records
+from repro.core.records import TensorUsageRecord
+
+VMEM_BYTES = 16 * 2**20  # v5e per-core VMEM
+
+
+@dataclasses.dataclass
+class KernelVmemPlan:
+    plan: MemoryPlan
+    fits: bool
+    budget: int = VMEM_BYTES
+
+    def summary(self) -> str:
+        return (
+            f"{self.plan.graph_name}: {self.plan.total_size / 2**10:.0f} KiB "
+            f"of {self.budget / 2**20:.0f} MiB VMEM "
+            f"({'fits' if self.fits else 'OVER BUDGET'}; "
+            f"naive co-residency {self.plan.naive_size / 2**10:.0f} KiB)"
+        )
+
+
+def plan_flash_decode_vmem(
+    *, G: int, D: int, block_t: int, dtype_bytes: int = 2
+) -> KernelVmemPlan:
+    """One flash_decode grid step as tensor usage records.
+
+    Pipeline stages (ops): 0 load k/v tile i | 1 compute scores |
+    2 softmax-update | 3 accumulate | 4 prefetch tile i+1 (overlaps 1-3).
+    Persistent scratch (q, m, l, acc) lives across all stages.
+    """
+    recs = []
+    tid = 0
+
+    def add(first, last, nbytes):
+        nonlocal tid
+        recs.append(TensorUsageRecord(first, last, max(nbytes, 1), tensor_id=tid))
+        tid += 1
+
+    q = G * D * dtype_bytes
+    kv_tile = block_t * D * dtype_bytes
+    scores = G * block_t * 4  # fp32
+    stats = G * 1 * 4  # m and l
+    acc = G * D * 4
+
+    add(0, 4, q)            # q tile (persistent for the row)
+    add(0, 1, kv_tile)      # k tile i — retires after the score matmul
+    add(0, 3, kv_tile)      # v tile i — needed through accumulation
+    add(1, 2, scores)       # score tile (fp32)
+    add(2, 3, scores)       # exp(p) tile
+    add(0, 4, stats)        # running max m
+    add(0, 4, stats)        # running sum l
+    add(0, 4, acc)          # output accumulator
+    add(1, 4, kv_tile)      # k tile i+1 (double buffer: overlaps compute)
+    add(2, 4, kv_tile)      # v tile i+1
+    plan = plan_records(
+        recs, mode="offsets", strategy="greedy_by_size",
+        graph_name=f"flash_decode[G={G},D={D},block_t={block_t}]",
+    )
+    return KernelVmemPlan(plan=plan, fits=plan.total_size <= VMEM_BYTES)

@@ -1,0 +1,218 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
+
+The two lines above MUST run before any jax import anywhere — jax locks
+the device count at first init. 512 placeholder CPU devices let
+``jax.make_mesh`` build the production meshes:
+
+    single pod : (data=16, model=16)        = 256 chips (v5e-256)
+    multi-pod  : (pod=2, data=16, model=16) = 512 chips
+
+For each combination we ``jit(step).lower(specs).compile()`` with the
+arch's sharding rules, print ``memory_analysis()`` (proves per-device fit)
+and ``cost_analysis()`` + HLO collective bytes (feeds §Roofline).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k [--multi-pod] [--json out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.launch.hlo_analysis import analyze as analyze_hlo
+from repro.launch.mesh import ShardingCtx, make_production_mesh
+from repro.launch.roofline import Roofline, model_flops
+from repro.launch.train import make_train_step
+from repro.models.api import INPUT_SHAPES, Model
+from repro.optim import adamw
+
+
+def _eval_shapes(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def build_step(arch: str, shape_name: str, mesh, *, seq_parallel: bool = False):
+    """Returns (jitted_fn, arg ShapeDtypeStructs) or (None, reason)."""
+    cfg = get_config(arch)
+    model = Model.for_config(cfg)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = model.supports_shape(shape)
+    if not ok:
+        return None, why
+    ctx = ShardingCtx(mesh, cfg, seq_parallel=seq_parallel)
+    constrain = ctx.constrain
+
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda: model.init(key))
+    p_shard = ctx.param_shardings(params_shape)
+    batch_specs = model.input_specs(shape)
+    b_shard = ctx.batch_shardings(batch_specs)
+
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig()
+        opt_shape = jax.eval_shape(lambda: adamw.init_state(params_shape))
+        o_shard = {
+            "step": ctx.replicated(opt_shape["step"]),
+            "m": ctx.param_shardings(opt_shape["m"]),
+            "v": ctx.param_shardings(opt_shape["v"]),
+        }
+        step = make_train_step(model, opt_cfg, constrain=constrain, remat=True)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+        )
+        return (jitted, (params_shape, opt_shape, batch_specs)), None
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            logits, caches = model.prefill(params, batch, constrain=constrain)
+            return logits, caches
+
+        out_caches = jax.eval_shape(prefill_step, params_shape, batch_specs)[1]
+        jitted = jax.jit(
+            prefill_step,
+            in_shardings=(p_shard, b_shard),
+            out_shardings=(None, ctx.cache_shardings(out_caches)),
+        )
+        return (jitted, (params_shape, batch_specs)), None
+
+    # decode: ONE token against a seq_len cache
+    B = shape.global_batch
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(B, shape.seq_len)
+    )
+    c_shard = ctx.cache_shardings(cache_shape)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    act = jax.ShapeDtypeStruct((B,), jnp.bool_)
+
+    def serve_step(params, token, caches, pos, active):
+        return model.decode_step(
+            params, token, caches, pos, constrain=constrain, active=active
+        )
+
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(p_shard, None, c_shard, None, None),
+        out_shardings=(None, c_shard),
+        donate_argnums=(2,),  # caches update in place (aliased buffers)
+    )
+    return (jitted, (params_shape, tok, cache_shape, pos, act)), None
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False,
+            seq_parallel: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.perf_counter()
+    built, why = build_step(arch, shape_name, mesh, seq_parallel=seq_parallel)
+    if built is None:
+        return {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "skipped", "reason": why,
+        }
+    jitted, specs = built
+    with mesh:
+        lowered = jitted.lower(*specs)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # NOTE: XLA's cost_analysis() counts while bodies once (ignores trip
+    # count) — see launch/hlo_analysis.py; we use our trip-aware analyzer
+    # and keep XLA's numbers for reference.
+    hc = analyze_hlo(hlo)
+    n_dev = mesh.size
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    rl = Roofline(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name,
+        flops=hc.flops,
+        bytes_accessed=hc.bytes,
+        collective_bytes=hc.collective_bytes,
+        collectives=hc,
+        model_flops=model_flops(cfg, shape) / n_dev,
+        peak_memory_bytes=float(
+            getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0)
+        ),
+    )
+    out = {
+        "status": "ok",
+        **rl.row(),
+        "wall_s": time.perf_counter() - t0,
+        "temp_gb": getattr(mem, "temp_size_in_bytes", 0) / 1e9,
+        "arg_gb": getattr(mem, "argument_size_in_bytes", 0) / 1e9,
+        "out_gb": getattr(mem, "output_size_in_bytes", 0) / 1e9,
+        "collective_counts": hc.collective_counts,
+        "collective_bytes_by_kind": hc.collective_bytes_by_kind,
+        "unknown_trip_loops": hc.unknown_trip_loops,
+        "xla_flops_per_dev": float(cost.get("flops", 0.0)),
+        "xla_bytes_per_dev": float(cost.get("bytes accessed", 0.0)),
+    }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                combos.append((a, s, False))
+                combos.append((a, s, True))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required (or --all)")
+        combos = [(args.arch, args.shape, args.multi_pod)]
+
+    results = []
+    for arch, shape, mp in combos:
+        try:
+            res = run_one(arch, shape, mp, seq_parallel=args.seq_parallel)
+        except Exception as e:  # a dry-run failure is a bug in our system
+            res = {
+                "arch": arch, "shape": shape,
+                "mesh": "2x16x16" if mp else "16x16",
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:],
+            }
+        results.append(res)
+        print(json.dumps(res, default=str))
+        sys.stdout.flush()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    n_bad = sum(r["status"] == "error" for r in results)
+    print(f"# {len(results)} combos, {n_bad} errors", file=sys.stderr)
+    sys.exit(1 if n_bad else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,229 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Per (arch × shape × mesh):
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes / HBM_bw               (per chip)
+    collective term = collective_bytes / link_bw       (per chip)
+
+``cost_analysis()`` on the SPMD-partitioned executable reports per-device
+FLOPs/bytes. Collective bytes are NOT in cost_analysis — we parse the
+optimized HLO text and sum OPERAND sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# matches e.g. "bf16[8,128]{1,0}" or "f32[]" inside operand lists
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, int]
+    count_by_kind: dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective op in the optimized HLO."""
+    bytes_by: dict[str, int] = {}
+    count_by: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # "%name = TYPE kind(OPERANDS), ..." — find " kind(" after the "="
+        eq = s.find("= ")
+        if eq < 0:
+            continue
+        rhs = s[eq + 2 :]
+        m = re.search(r"\b([a-z0-9-]+)\(", rhs)
+        if not m:
+            continue
+        kind = m.group(1)
+        base = None
+        for c in _COLLECTIVES:
+            if kind == c or kind.startswith(c + "-"):  # all-gather-start etc.
+                base = c
+                break
+        if base is None or kind.endswith("-done"):
+            continue
+        operands = rhs[m.end() :]
+        depth, end = 1, 0
+        for j, ch in enumerate(operands):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = j
+                    break
+        operands = operands[:end]
+        total = sum(
+            _shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(operands)
+        )
+        bytes_by[base] = bytes_by.get(base, 0) + total
+        count_by[base] = count_by.get(base, 0) + 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float  # per device
+    bytes_accessed: float  # per device
+    collective_bytes: float  # per device
+    collectives: CollectiveStats
+    model_flops: float  # 6·N·D (or active-N) whole-step, per device share
+    peak_memory_bytes: float  # per-device from memory_analysis
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "hlo_gflops": self.flops / 1e9,
+            "hbm_gb": self.bytes_accessed / 1e9,
+            "coll_gb": self.collective_bytes / 1e9,
+            "model_flops_ratio": self.useful_flops_ratio,
+            "peak_mem_gb": self.peak_memory_bytes / 1e9,
+        }
+
+
+def count_params(cfg) -> int:
+    """Parameter count from the config (analytic, no allocation)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    hd = cfg.resolved_head_dim
+    per_layer = 0
+    n_attn = n_mamba = n_mlp = n_moe = n_shared_attn = 0
+    for spec in list(cfg.period) * cfg.n_periods + list(cfg.remainder):
+        if spec.mixer == "attn":
+            n_attn += 1
+        if spec.mixer == "mamba":
+            n_mamba += 1
+        if spec.ffn == "mlp":
+            n_mlp += 1
+        if spec.ffn == "moe":
+            n_moe += 1
+        if spec.shared_attn:
+            n_shared_attn += 1
+    attn_p = d * hd * (cfg.n_heads * 2 + cfg.n_kv_heads * 2)
+    gate = 0 if cfg.act == "sq_relu" else 1
+    mlp_p = d * f * (2 + gate)
+    total = v * d + n_attn * attn_p + n_mlp * mlp_p
+    if n_moe:
+        moe_p = cfg.n_experts * d * f * 3 + d * cfg.n_experts
+        if cfg.shared_expert:
+            moe_p += mlp_p
+        total += n_moe * moe_p
+    if n_mamba:
+        from repro.models.ssm import ssm_dims
+
+        d_inner, nheads, conv_dim = ssm_dims(
+            d, cfg.ssm_expand, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+        )
+        proj_in = d * (2 * d_inner + 2 * cfg.ssm_groups * cfg.ssm_state + nheads)
+        total += n_mamba * (proj_in + d_inner * d + cfg.ssm_conv * conv_dim)
+    if n_shared_attn and cfg.shared_attn_heads:
+        d2 = 2 * d
+        total += d2 * d2 * 4 + d2 * f * 3 + d2 * d  # shared once
+    if cfg.encoder_layers:
+        total += cfg.encoder_layers * (attn_p + mlp_p)
+        total += cfg.n_layers * attn_p  # decoder cross-attention
+    return int(total)
+
+
+def active_params(cfg) -> int:
+    """Active params per token (MoE: top_k of n_experts)."""
+    if not cfg.n_experts:
+        return count_params(cfg)
+    full = count_params(cfg)
+    n_moe = sum(
+        1 for s in list(cfg.period) * cfg.n_periods + list(cfg.remainder)
+        if s.ffn == "moe"
+    )
+    expert_p = cfg.n_experts * cfg.d_model * cfg.d_ff * 3
+    active_expert_p = cfg.top_k * cfg.d_model * cfg.d_ff * 3
+    return int(full - n_moe * (expert_p - active_expert_p))
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D for train, 2·N·D for inference forward (D = tokens)."""
+    n = active_params(cfg) - cfg.vocab * cfg.d_model  # non-embedding
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2.0
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        mult = 2.0
+    # embedding/unembedding matmul
+    unemb = 2.0 * tokens * cfg.d_model * cfg.vocab * (3.0 if shape.kind == "train" else 1.0)
+    return mult * n * tokens + unemb

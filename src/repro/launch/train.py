@@ -1,0 +1,143 @@
+"""Training driver: loss, train_step, and a runnable CPU loop.
+
+``make_train_step(model, mesh_ctx)`` builds the pjit-able step used by
+both the end-to-end example (examples/train_lm.py) and the multi-pod
+dry-run (train_4k shape).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, get_config, get_reduced
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models.api import Model
+from repro.optim import adamw
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+def make_loss_fn(model: Model, constrain=None, remat: bool = True):
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch, constrain=constrain, remat=remat)
+        labels = batch["labels"]
+        # VLM prefix positions have no labels: forward prepends
+        # n_prefix_tokens embeddings, so logits is longer than tokens.
+        S = labels.shape[1]
+        loss = cross_entropy(logits[:, -S:], labels)
+        return loss + 0.01 * aux, {"ce": loss, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: adamw.AdamWConfig,
+    constrain=None,
+    remat: bool = True,
+):
+    loss_fn = make_loss_fn(model, constrain, remat)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state
+        )
+        metrics = {"loss": loss, **metrics, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def run_training(
+    arch: str,
+    steps: int = 20,
+    reduced: bool = True,
+    seq_len: int = 128,
+    batch: int = 4,
+    log_every: int = 5,
+    ckpt_path: str | None = None,
+    save_every: int = 0,
+) -> list[dict[str, float]]:
+    cfg = get_reduced(arch) if reduced else get_config(arch)
+    model = Model.for_config(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=steps)
+    opt_state = adamw.init_state(params)
+    start_step = 0
+    if ckpt_path:
+        import os
+
+        from repro.checkpoint import ckpt
+
+        if os.path.exists(ckpt_path + ".npz"):
+            (params, opt_state), meta = ckpt.restore(
+                ckpt_path, (params, opt_state)
+            )
+            start_step = int(meta["step"])
+            print(f"resumed from {ckpt_path} at step {start_step}")
+    step_fn = jax.jit(make_train_step(model, opt_cfg, remat=False))
+    pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=seq_len, global_batch=batch))
+    history = []
+    for step in range(start_step, steps):
+        raw = pipe.batch_at(step)
+        b: dict[str, Any] = {
+            "tokens": jnp.asarray(raw["tokens"]),
+            "labels": jnp.asarray(raw["labels"]),
+        }
+        if cfg.n_prefix_tokens:
+            b["prefix_embeds"] = jnp.zeros(
+                (batch, cfg.n_prefix_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        if cfg.family == "audio":
+            b["frames"] = jnp.zeros(
+                (batch, max(seq_len // cfg.enc_len_ratio, 1), cfg.d_model),
+                jnp.dtype(cfg.dtype),
+            )
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, b)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        metrics["wall_s"] = time.perf_counter() - t0
+        history.append(metrics)
+        if step % log_every == 0:
+            print(f"step {step}: loss={metrics['loss']:.4f} "
+                  f"gnorm={metrics['grad_norm']:.3f} {metrics['wall_s']:.2f}s")
+        if ckpt_path and save_every and (step + 1) % save_every == 0:
+            from repro.checkpoint import ckpt
+
+            # exact resume: the pipeline is seekable by step, so saving
+            # (params, opt_state, step) is the complete training state
+            ckpt.save(ckpt_path, (params, opt_state), meta={"step": step + 1})
+    return history
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--full", action="store_true", help="use the full config")
+    args = ap.parse_args()
+    hist = run_training(
+        args.arch, steps=args.steps, reduced=not args.full,
+        seq_len=args.seq_len, batch=args.batch,
+    )
+    print(f"final loss: {hist[-1]['loss']:.4f} (first {hist[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""Uniform model API over all 10 architectures.
+
+``Model.for_config(cfg)`` returns an object with:
+  init(key)                                   -> params
+  forward(params, batch, constrain, remat)    -> (logits, aux)
+  prefill(params, batch, constrain)           -> (last_logits, caches)
+  decode_step(params, token, caches, pos, constrain) -> (logits, caches)
+  init_cache(batch, cache_len)                -> caches
+  input_specs(shape)                          -> ShapeDtypeStruct batch
+
+Modality frontends (VLM patches / audio frames) are stubs per the
+assignment: ``input_specs`` includes the precomputed embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    @staticmethod
+    def for_config(cfg: ArchConfig) -> "Model":
+        return EncDecModel(cfg) if cfg.family == "audio" else DecoderModel(cfg)
+
+    # ----- shared helpers
+    def supports_shape(self, shape: ShapeSpec) -> tuple[bool, str]:
+        if shape.name == "long_500k" and not self.cfg.supports_long_context:
+            return False, "pure full-attention arch; long_500k needs sub-quadratic"
+        return True, ""
+
+
+class DecoderModel(Model):
+    def init(self, key):
+        return transformer.init_params(self.cfg, key)
+
+    def _prefix(self, batch):
+        return batch.get("prefix_embeds")
+
+    def forward(self, params, batch, constrain=None, remat=False):
+        return transformer.forward(
+            params, self.cfg, batch["tokens"], self._prefix(batch),
+            constrain=constrain, remat=remat,
+        )
+
+    def prefill(self, params, batch, constrain=None):
+        return transformer.prefill(
+            params, self.cfg, batch["tokens"], self._prefix(batch),
+            constrain=constrain,
+        )
+
+    def decode_step(self, params, token, caches, pos, constrain=None, active=None):
+        return transformer.decode_step(
+            params, self.cfg, token, caches, pos, constrain=constrain,
+            active=active,
+        )
+
+    def init_cache(self, batch: int, cache_len: int):
+        return transformer.init_cache(self.cfg, batch, cache_len)
+
+    def reset_slots(self, caches, keep):
+        return transformer.reset_slots(caches, keep)
+
+    def input_specs(self, shape: ShapeSpec) -> dict[str, Any]:
+        cfg = self.cfg
+        B = shape.global_batch
+        dt = jnp.dtype(cfg.dtype)
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        S = shape.seq_len
+        specs: dict[str, Any] = {}
+        if cfg.n_prefix_tokens:
+            S = max(S - cfg.n_prefix_tokens, 1)
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_prefix_tokens, cfg.d_model), dt
+            )
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if shape.kind == "train":
+            # labels cover the TEXT positions only (prefix positions have
+            # no next-token target); see make_loss_fn.
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return specs
+
+
+class EncDecModel(Model):
+    def init(self, key):
+        return encdec.init_params(self.cfg, key)
+
+    def forward(self, params, batch, constrain=None, remat=False):
+        return encdec.forward(
+            params, self.cfg, batch["tokens"], batch["frames"],
+            constrain=constrain, remat=remat,
+        )
+
+    def prefill(self, params, batch, constrain=None):
+        return encdec.prefill(
+            params, self.cfg, batch["tokens"], batch["frames"], constrain=constrain
+        )
+
+    def decode_step(self, params, token, caches, pos, constrain=None, active=None):
+        return encdec.decode_step(
+            params, self.cfg, token, caches, pos, constrain=constrain,
+            active=active,
+        )
+
+    def init_cache(self, batch: int, cache_len: int):
+        enc_len = max(cache_len // self.cfg.enc_len_ratio, 1)
+        return encdec.init_cache(self.cfg, batch, cache_len, enc_len)
+
+    def reset_slots(self, caches, keep):
+        # all encdec cache leaves are (L, B, ...): batch on axis 1
+        def mask(leaf):
+            shape = [1] * leaf.ndim
+            shape[1] = leaf.shape[1]
+            return leaf * keep.astype(leaf.dtype).reshape(shape)
+
+        return jax.tree_util.tree_map(mask, caches)
+
+    def input_specs(self, shape: ShapeSpec) -> dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        dt = jnp.dtype(cfg.dtype)
+        S_enc = max(S // cfg.enc_len_ratio, 1)
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "frames": jax.ShapeDtypeStruct((B, S_enc, cfg.d_model), dt),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return specs

@@ -1,0 +1,221 @@
+"""Encoder–decoder backbone (seamless-m4t style, arXiv:2308.11596).
+
+Per the assignment carve-out the audio frontend (mel-spectrogram + conv
+feature extractor) is a STUB: ``input_specs`` supplies precomputed frame
+embeddings (B, S_enc, d_model). We implement the transformer itself:
+bidirectional encoder + causal decoder with cross-attention.
+
+Decoder decode_step keeps (self-attn KV cache, precomputed cross-attn KV).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import init_rms, mlp_apply, mlp_init, rms_norm
+
+Constrain = Callable[[jax.Array, str], jax.Array] | None
+
+
+def _enc_layer_init(key, cfg: ArchConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rms(cfg.d_model),
+        "attn": attn.attn_init(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.resolved_head_dim, cfg.qk_norm, dtype,
+        ),
+        "ln2": init_rms(cfg.d_model),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def _dec_layer_init(key, cfg: ArchConfig, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = _enc_layer_init(key, cfg, dtype)
+    p["ln_x"] = init_rms(cfg.d_model)
+    p["xattn"] = attn.cross_attn_init(
+        k3, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim, dtype
+    )
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ke, kd, kemb = jax.random.split(key, 3)
+    import numpy as np
+
+    return {
+        "embed": (
+            jax.random.normal(kemb, (cfg.vocab, cfg.d_model), jnp.float32)
+            / np.sqrt(cfg.d_model)
+        ).astype(dtype),
+        "enc": jax.vmap(lambda k: _enc_layer_init(k, cfg, dtype))(
+            jax.random.split(ke, cfg.encoder_layers)
+        ),
+        "dec": jax.vmap(lambda k: _dec_layer_init(k, cfg, dtype))(
+            jax.random.split(kd, cfg.n_layers)
+        ),
+        "ln_f": init_rms(cfg.d_model),
+        "ln_enc": init_rms(cfg.d_model),
+    }
+
+
+def _bidir_attn(p, x, cfg, constrain):
+    """Full bidirectional self-attention for the encoder (chunked)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q, k, v = attn._project_qkv(
+        p, x, cfg.n_heads, cfg.n_kv_heads, hd,
+        jnp.arange(S)[None, :].astype(jnp.int32), cfg.rope_theta, cfg.rms_eps,
+    )
+    if constrain is not None:
+        q = constrain(q, "heads")
+    import numpy as np
+
+    s = attn._gqa_scores(q, k) / np.sqrt(hd)
+    probs = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(x.dtype)
+    return attn._gqa_out(probs, v) @ p["wo"]
+
+
+def encode(params, cfg: ArchConfig, frames: jax.Array, constrain: Constrain = None):
+    """frames: (B, S_enc, D) stub embeddings -> encoder output (B, S_enc, D)."""
+    h = frames.astype(jnp.dtype(cfg.dtype))
+    if constrain is not None:
+        h = constrain(h, "hidden")
+
+    def body(h, lp):
+        x = rms_norm(h, lp["ln1"], cfg.rms_eps)
+        h = h + _bidir_attn(lp["attn"], x, cfg, constrain)
+        h = h + mlp_apply(lp["mlp"], rms_norm(h, lp["ln2"], cfg.rms_eps), cfg.act, constrain)
+        if constrain is not None:
+            h = constrain(h, "hidden")
+        return h, None
+
+    h, _ = jax.lax.scan(body, h, params["enc"])
+    return rms_norm(h, params["ln_enc"], cfg.rms_eps)
+
+
+def cross_kv(params, cfg: ArchConfig, enc_out: jax.Array):
+    """Precompute per-layer cross-attention K/V (stacked over layers)."""
+    hd = cfg.resolved_head_dim
+
+    def one(lp):
+        return attn.encode_kv(lp["xattn"], enc_out, cfg.n_kv_heads, hd)
+
+    return jax.vmap(one, in_axes=0)(params["dec"])
+
+
+def _dec_block(lp, cfg, h, enc_kv, constrain, cache=None, pos=None, decode=False, active=None):
+    hd = cfg.resolved_head_dim
+    x = rms_norm(h, lp["ln1"], cfg.rms_eps)
+    kwargs = dict(
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=hd,
+        theta=cfg.rope_theta, window=None, eps=cfg.rms_eps, constrain=constrain,
+    )
+    if decode:
+        a, kv = attn.attn_decode(lp["attn"], x, cache, pos, active=active, **kwargs)
+    else:
+        a, kv = attn.attn_prefill(lp["attn"], x, **kwargs)
+    h = h + a
+    h = h + attn.cross_attn(
+        lp["xattn"], rms_norm(h, lp["ln_x"], cfg.rms_eps), enc_kv,
+        n_heads=cfg.n_heads, head_dim=hd, constrain=constrain,
+    )
+    h = h + mlp_apply(lp["mlp"], rms_norm(h, lp["ln2"], cfg.rms_eps), cfg.act, constrain)
+    if constrain is not None:
+        h = constrain(h, "hidden")
+    return h, kv
+
+
+def forward(
+    params: dict,
+    cfg: ArchConfig,
+    tokens: jax.Array,  # (B, S_dec)
+    frames: jax.Array,  # (B, S_enc, D)
+    constrain: Constrain = None,
+    remat: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Teacher-forced training forward -> (logits, aux=0)."""
+    enc_out = encode(params, cfg, frames, constrain)
+    kvs = cross_kv(params, cfg, enc_out)
+    h = params["embed"][tokens]
+
+    def body(h, xs):
+        lp, kv = xs
+        h, _ = _dec_block(lp, cfg, h, kv, constrain)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body_fn, h, (params["dec"], kvs))
+    h = rms_norm(h, params["ln_f"], cfg.rms_eps)
+    logits = h @ params["embed"].T
+    if constrain is not None:
+        logits = constrain(logits, "logits")
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, enc_len: int) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    L = cfg.n_layers
+    return {
+        "self": (
+            jnp.zeros((L, batch, cache_len, cfg.n_kv_heads, hd), dtype),
+            jnp.zeros((L, batch, cache_len, cfg.n_kv_heads, hd), dtype),
+        ),
+        "cross": (
+            jnp.zeros((L, batch, enc_len, cfg.n_kv_heads, hd), dtype),
+            jnp.zeros((L, batch, enc_len, cfg.n_kv_heads, hd), dtype),
+        ),
+    }
+
+
+def prefill(params, cfg, tokens, frames, constrain: Constrain = None):
+    """Encode + teacher-forced pass over the prompt; returns (last logits,
+    caches dict with 'self' and 'cross')."""
+    enc_out = encode(params, cfg, frames, constrain)
+    kvs = cross_kv(params, cfg, enc_out)
+    h = params["embed"][tokens]
+
+    def body(h, xs):
+        lp, kv = xs
+        h, self_kv = _dec_block(lp, cfg, h, kv, constrain)
+        return h, self_kv
+
+    h, self_kvs = jax.lax.scan(body, h, (params["dec"], kvs))
+    h = rms_norm(h, params["ln_f"], cfg.rms_eps)
+    logits = h[:, -1] @ params["embed"].T
+    return logits, {"self": self_kvs, "cross": kvs}
+
+
+def decode_step(
+    params: dict,
+    cfg: ArchConfig,
+    token: jax.Array,  # (B, 1)
+    caches: dict,
+    pos: jax.Array,
+    constrain: Constrain = None,
+    active: jax.Array | None = None,
+) -> tuple[jax.Array, dict]:
+    h = params["embed"][token]
+    if constrain is not None:
+        h = constrain(h, "hidden")
+
+    def body(h, xs):
+        lp, self_kv, kv = xs
+        h, new_kv = _dec_block(lp, cfg, h, kv, constrain, self_kv, pos,
+                               decode=True, active=active)
+        return h, new_kv
+
+    h, new_self = jax.lax.scan(body, h, (params["dec"], caches["self"], caches["cross"]))
+    h = rms_norm(h, params["ln_f"], cfg.rms_eps)
+    logits = h[:, 0] @ params["embed"].T
+    if constrain is not None:
+        logits = constrain(logits, "logits")
+    return logits, {"self": new_self, "cross": caches["cross"]}

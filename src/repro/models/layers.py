@@ -1,0 +1,72 @@
+"""Shared neural-net layers (pure functions over param pytrees)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rms(d: int) -> jax.Array:
+    return jnp.zeros((d,), jnp.float32)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D); positions: broadcastable to
+    (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half : 2 * half]
+    rot1 = x1 * cos - x2 * sin
+    rot2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([rot1, rot2, x[..., 2 * half :]], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "sq_relu":  # Nemotron-4 (arXiv:2402.16819)
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name}")
+
+
+def init_linear(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.uniform(key, (d_in, d_out), jnp.float32, -scale, scale)).astype(dtype)
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_out": init_linear(k2, d_ff, d_model, dtype)}
+    if act == "sq_relu":  # no gate (Nemotron style)
+        p["w_in"] = init_linear(k1, d_model, d_ff, dtype)
+    else:  # gated (SwiGLU/GeGLU)
+        p["w_in"] = init_linear(k1, d_model, d_ff, dtype)
+        p["w_gate"] = init_linear(k3, d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(p: dict, x: jax.Array, act: str, constrain=None) -> jax.Array:
+    f = activation(act)
+    h = x @ p["w_in"]
+    if "w_gate" in p:
+        h = f(x @ p["w_gate"]) * h
+    else:
+        h = f(h)
+    if constrain is not None:
+        h = constrain(h, "ffn")
+    return h @ p["w_out"]

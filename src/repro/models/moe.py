@@ -1,0 +1,138 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based one-hot dispatch.
+
+This is the TPU-native (GShard/Switch) MoE form: tokens are dispatched to
+experts via one-hot einsums with a fixed per-expert capacity, which keeps
+all shapes static for XLA and maps the routing all-to-all onto sharded
+einsums. Expert weights are stacked (E, d_model, d_ff) and sharded on the
+experts axis when divisible by the model-parallel degree (llama4: 128/16),
+else on d_ff (granite: 40 experts, d_ff 512).
+
+Aux load-balancing loss (Switch-style) is returned for the trainer.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import activation, init_linear
+
+Constrain = Callable[[jax.Array, str], jax.Array] | None
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, act: str,
+             shared_expert: bool, dtype) -> dict:
+    kr, k1, k2, k3, ks = jax.random.split(key, 5)
+    p = {
+        "router": init_linear(kr, d_model, n_experts, jnp.float32),
+        "w_in": jax.vmap(lambda k: init_linear(k, d_model, d_ff, dtype))(
+            jax.random.split(k1, n_experts)
+        ),
+        "w_gate": jax.vmap(lambda k: init_linear(k, d_model, d_ff, dtype))(
+            jax.random.split(k2, n_experts)
+        ),
+        "w_out": jax.vmap(lambda k: init_linear(k, d_ff, d_model, dtype))(
+            jax.random.split(k3, n_experts)
+        ),
+    }
+    if shared_expert:
+        from repro.models.layers import mlp_init
+
+        p["shared"] = mlp_init(ks, d_model, d_ff, act, dtype)
+    return p
+
+
+def dispatch_group_size(d_ff: int, top_k: int, seq_len: int,
+                        capacity_factor: float = 1.25) -> int:
+    """One-hot dispatch costs S·(S·k·cf)·D per group (quadratic in group
+    size) while expert compute is S·k·6·D·F — so cap the group size at
+    ~0.6·F/cf to keep dispatch ≲10% of expert FLOPs (GShard sizing)."""
+    target = max(int(0.6 * d_ff / capacity_factor), 128)
+    g = 128
+    while g * 2 <= min(target, 4096):
+        g *= 2
+    return min(g, max(seq_len, 1))
+
+
+def moe_apply(
+    p: dict,
+    x: jax.Array,  # (B, S, D)
+    *,
+    n_experts: int,
+    top_k: int,
+    act: str,
+    capacity_factor: float = 1.25,
+    constrain: Constrain = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (out (B,S,D), aux_loss scalar).
+
+    GShard-style grouped dispatch: the sequence is split into groups of
+    ``dispatch_group_size`` tokens; capacity is per group. Keeps the
+    dispatch one-hot (B,G,g,E,C) linear in sequence length.
+    """
+    B, S, D = x.shape
+    f = activation(act)
+    logits = (x.astype(jnp.float32) @ p["router"])  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k gating
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # (B,S,k)
+    gate_vals = gate_vals / jnp.clip(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )  # renormalize among chosen
+
+    # Switch aux loss: E * sum_e (fraction_tokens_e * mean_prob_e)
+    sel_onehot = jax.nn.one_hot(gate_idx, n_experts, dtype=jnp.float32)  # (B,S,k,E)
+    tokens_per_expert = sel_onehot.sum((1, 2)) / (S * top_k)  # (B,E)
+    mean_prob = probs.mean(1)  # (B,E)
+    aux = (tokens_per_expert * mean_prob).sum(-1).mean() * n_experts
+
+    # ---- grouped capacity dispatch
+    d_ff = p["w_in"].shape[-1]
+    g = dispatch_group_size(d_ff, top_k, S, capacity_factor)
+    pad = (-S) % g
+    if pad:
+        x_p = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        sel_p = jnp.pad(sel_onehot, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        gate_p = jnp.pad(gate_vals, ((0, 0), (0, pad), (0, 0)))
+    else:
+        x_p, sel_p, gate_p = x, sel_onehot, gate_vals
+    Sp = S + pad
+    G = Sp // g
+    capacity = max(int(capacity_factor * g * top_k / n_experts), 1)
+
+    sel_g = sel_p.reshape(B, G, g, top_k, n_experts)
+    # rank of each (token, k) among same-expert selections within the group
+    flat = sel_g.reshape(B, G, g * top_k, n_experts)
+    pos = (jnp.cumsum(flat, axis=2) - flat).reshape(
+        B, G, g, top_k, n_experts
+    )
+    within = pos < capacity
+    cap_oh = jax.nn.one_hot(
+        jnp.where(within, pos, capacity).astype(jnp.int32),
+        capacity + 1, dtype=jnp.float32,
+    )[..., :capacity]  # (B,G,g,k,E,C)
+    dispatch = (sel_g[..., None] * cap_oh).sum(3)  # (B,G,g,E,C)
+    combine = ((sel_g * gate_p.reshape(B, G, g, top_k)[..., None])[..., None]
+               * cap_oh).sum(3)  # (B,G,g,E,C)
+
+    xg = x_p.reshape(B, G, g, D)
+    xin = jnp.einsum("bnsec,bnsd->bnecd", dispatch.astype(x.dtype), xg)
+    if constrain is not None:
+        xin = constrain(xin, "experts")
+    h = jnp.einsum("bnecd,edf->bnecf", xin, p["w_in"])
+    gt = jnp.einsum("bnecd,edf->bnecf", xin, p["w_gate"])
+    h = f(gt) * h
+    if constrain is not None:
+        h = constrain(h, "experts_ff")
+    eo = jnp.einsum("bnecf,efd->bnecd", h, p["w_out"])  # (B,G,E,C,D)
+    out = jnp.einsum("bnsec,bnecd->bnsd", combine.astype(x.dtype), eo)
+    out = out.reshape(B, Sp, D)[:, :S]
+
+    if "shared" in p:
+        from repro.models.layers import mlp_apply
+
+        out = out + mlp_apply(p["shared"], x, act, constrain)
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,48 @@
+"""Flat memory arena materializing an Offset Calculation plan (paper §5).
+
+One ``bytearray``-backed numpy buffer of ``plan.total_size`` bytes; every
+intermediate tensor is a zero-copy view at its planned offset. This is the
+TFLite-style deployment of the paper's result: allocate once, reuse across
+the whole inference — and across inferences.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.planner import MemoryPlan
+
+
+class Arena:
+    def __init__(self, plan: MemoryPlan):
+        self.plan = plan
+        self.buf = np.zeros(max(plan.total_size, 1), dtype=np.uint8)
+        self._sizes = {r.tensor_id: r.size for r in plan.records}
+
+    @property
+    def nbytes(self) -> int:
+        return self.buf.nbytes
+
+    def store(self, tensor_id: int, value: np.ndarray) -> np.ndarray:
+        """Copy ``value``'s bytes to the tensor's planned slot; return a
+        view aliasing arena memory (C-contiguous, same shape/dtype)."""
+        off = self.plan.offsets[tensor_id]
+        raw = np.ascontiguousarray(value)
+        nbytes = raw.nbytes
+        if nbytes > self._sizes[tensor_id]:
+            raise ValueError(
+                f"tensor {tensor_id}: {nbytes} B exceeds planned "
+                f"{self._sizes[tensor_id]} B"
+            )
+        dst = self.buf[off : off + nbytes]
+        dst[:] = raw.reshape(-1).view(np.uint8)
+        return self.view(tensor_id, raw.shape, raw.dtype)
+
+    def view(self, tensor_id: int, shape, dtype) -> np.ndarray:
+        off = self.plan.offsets[tensor_id]
+        nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize
+        return (
+            self.buf[off : off + nbytes]
+            .view(np.dtype(dtype))
+            .reshape(shape)
+        )

@@ -1,0 +1,241 @@
+"""Extract the paper's tensor usage records from any JAX computation.
+
+``trace_graph(fn, *args)`` traces ``fn`` to a jaxpr and converts it to a
+:class:`repro.core.graph.Graph`:
+
+* each jaxpr equation (in program order — the fixed topological sort the
+  paper assumes) becomes one operator;
+* each intermediate ``Var`` becomes a tensor whose byte size comes from its
+  abstract value (shape × dtype);
+* jaxpr ``invars``/``constvars`` (inputs, weights) and ``outvars`` (final
+  outputs) are *boundary* tensors — exactly the paper's carve-out ("tensor
+  #8 is not an intermediate tensor" in Fig. 1).
+
+Higher-order equations (``scan``, ``cond``, ``while`` …) are treated as
+single opaque operators — the inference-engine view where a fused region
+executes atomically. ``pjit``/``closed_call``/``remat`` bodies are inlined
+(``inline_nested=True``, default) since they are just function boundaries,
+matching what the runtime executor and XLA actually materialize.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.extend.core import Literal
+
+from repro.core.graph import Graph, Op, TensorSpec
+
+_INLINE = {
+    "pjit",
+    "closed_call",
+    "core_call",
+    "remat",
+    "checkpoint",
+    "remat2",
+    "custom_jvp_call",
+    "custom_vjp_call",
+}
+
+
+def _aval_nbytes(aval) -> int:
+    try:
+        shape = aval.shape
+        dtype = np.dtype(aval.dtype)
+    except Exception:  # non-array avals (tokens, refs): treat as tiny
+        return 1
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return max(n * dtype.itemsize, 1)
+
+
+def _sub_closed_jaxpr(eqn):
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        sub = eqn.params.get(key)
+        if sub is not None and hasattr(sub, "jaxpr"):
+            return sub
+    return None
+
+
+class _Builder:
+    def __init__(
+        self,
+        inline: frozenset[str] = frozenset(_INLINE),
+        expand_scan: bool = True,
+    ) -> None:
+        self.tensors: dict[int, TensorSpec] = {}
+        self.ops: list[Op] = []
+        self.boundary: set[int] = set()
+        self.inline = inline
+        self.expand_scan = expand_scan
+        # Var object -> tensor id, across ALL (inlined) jaxpr levels.
+        # Aliases (inner outvar == outer outvar) map to the same id. The
+        # arena executor keys its environment off this mapping.
+        self.var_tid: dict[Any, int] = {}
+        self._seen_subjaxprs: set[int] = set()
+        self._next = 0
+
+    def new_tensor(self, aval, name: str = "") -> int:
+        i = self._next
+        self._next += 1
+        self.tensors[i] = TensorSpec(
+            tensor_id=i,
+            nbytes=_aval_nbytes(aval),
+            name=name,
+            shape=tuple(int(s) for s in getattr(aval, "shape", ())) or None,
+            dtype=str(getattr(aval, "dtype", "")) or None,
+        )
+        return i
+
+    def resolve(self, v) -> int | None:
+        """Var -> tensor id; Vars never seen as a definition (e.g. free
+        constvars) become boundary tensors. Literals have no tensor."""
+        if isinstance(v, Literal):
+            return None
+        if v not in self.var_tid:
+            self.var_tid[v] = self.new_tensor(v.aval, str(v))
+            self.boundary.add(self.var_tid[v])
+        return self.var_tid[v]
+
+    def walk(self, jaxpr) -> None:
+        """Emit ops for ``jaxpr``'s eqns into self.ops/self.var_tid.
+
+        Var objects are unique across the whole jaxpr nest, so one global
+        mapping suffices; aliases point multiple Vars at one tensor id.
+        """
+        for eqn in jaxpr.eqns:
+            sub = _sub_closed_jaxpr(eqn)
+            if (
+                self.expand_scan
+                and eqn.primitive.name == "scan"
+                and sub is not None
+                and id(sub.jaxpr) not in self._seen_subjaxprs
+            ):
+                # Model one loop iteration: a layer-wise inference engine
+                # reuses the SAME body buffers every iteration, so the
+                # body's intermediates appear once in the liveness graph
+                # (their arena region is reused across iterations — the
+                # paper's chain-reuse argument applied to the layer loop).
+                # Body inputs (consts/carry/xs slices) are per-iteration
+                # boundary tensors; the outer outvars are produced by a
+                # synthetic `scan` op consuming the body results.
+                inner = sub.jaxpr
+                self._seen_subjaxprs.add(id(inner))
+                for v in (*inner.constvars, *inner.invars):
+                    if v not in self.var_tid:
+                        self.var_tid[v] = self.new_tensor(v.aval, str(v))
+                        self.boundary.add(self.var_tid[v])
+                self.walk(inner)
+                body_out = tuple(
+                    self.var_tid[v]
+                    for v in inner.outvars
+                    if not isinstance(v, Literal) and v in self.var_tid
+                )
+                outs = []
+                for v in eqn.outvars:
+                    if type(v).__name__ == "DropVar":
+                        continue
+                    self.var_tid[v] = self.new_tensor(v.aval, str(v))
+                    outs.append(self.var_tid[v])
+                carries = tuple(
+                    x for v in eqn.invars if (x := self.resolve(v)) is not None
+                )
+                self.ops.append(
+                    Op(name="scan", inputs=body_out + carries, outputs=tuple(outs))
+                )
+                continue
+            if (
+                eqn.primitive.name in self.inline
+                and sub is not None
+                and id(sub.jaxpr) not in self._seen_subjaxprs
+            ):
+                inner = sub.jaxpr
+                self._seen_subjaxprs.add(id(inner))
+                for cv in inner.constvars:
+                    self.var_tid[cv] = self.new_tensor(cv.aval, str(cv))
+                    self.boundary.add(self.var_tid[cv])
+                for iv, ov in zip(inner.invars, eqn.invars):
+                    r = self.resolve(ov)
+                    if r is None:  # literal arg: synthesize a boundary tensor
+                        self.var_tid[iv] = self.new_tensor(iv.aval, str(iv))
+                        self.boundary.add(self.var_tid[iv])
+                    else:
+                        self.var_tid[iv] = r
+                self.walk(inner)
+                for inner_ov, outer_ov in zip(inner.outvars, eqn.outvars):
+                    if type(outer_ov).__name__ == "DropVar":
+                        continue
+                    if isinstance(inner_ov, Literal):
+                        self.var_tid[outer_ov] = self.new_tensor(
+                            outer_ov.aval, str(outer_ov)
+                        )
+                        self.boundary.add(self.var_tid[outer_ov])
+                    else:
+                        self.var_tid[outer_ov] = self.var_tid[inner_ov]
+                continue
+            ins = tuple(
+                x for v in eqn.invars if (x := self.resolve(v)) is not None
+            )
+            outs = []
+            for v in eqn.outvars:
+                if type(v).__name__ == "DropVar":
+                    continue
+                self.var_tid[v] = self.new_tensor(v.aval, str(v))
+                outs.append(self.var_tid[v])
+            self.ops.append(
+                Op(name=eqn.primitive.name, inputs=ins, outputs=tuple(outs))
+            )
+
+
+def graph_from_jaxpr(
+    closed_jaxpr,
+    name: str = "jaxpr",
+    *,
+    inline_nested: bool = True,
+    expand_scan: bool = True,
+) -> Graph:
+    """Convert a ClosedJaxpr to a Graph. The returned Graph carries the
+    Var->tensor-id mapping as ``graph.var_tid`` (used by the executor).
+
+    ``expand_scan`` models each ``lax.scan`` as ONE iteration of its body
+    (buffers reused across iterations, as a layer-wise engine executes)."""
+    jaxpr = closed_jaxpr.jaxpr
+    b = _Builder(
+        frozenset(_INLINE) if inline_nested else frozenset(),
+        expand_scan=expand_scan,
+    )
+    for v in (*jaxpr.constvars, *jaxpr.invars):
+        b.var_tid[v] = b.new_tensor(v.aval, str(v))
+        b.boundary.add(b.var_tid[v])
+    b.walk(jaxpr)
+    for v in jaxpr.outvars:
+        if isinstance(v, Literal) or type(v).__name__ == "DropVar":
+            continue
+        if v in b.var_tid:
+            b.boundary.add(b.var_tid[v])
+    g = Graph(
+        name=name, ops=b.ops, tensors=b.tensors, boundary_ids=frozenset(b.boundary)
+    )
+    g.var_tid = dict(b.var_tid)  # type: ignore[attr-defined]
+    g.validate()
+    return g
+
+
+def trace_graph(
+    fn: Callable,
+    *args,
+    name: str | None = None,
+    inline_nested: bool = True,
+    expand_scan: bool = True,
+    **kwargs,
+) -> Graph:
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return graph_from_jaxpr(
+        closed,
+        name=name or getattr(fn, "__name__", "fn"),
+        inline_nested=inline_nested,
+        expand_scan=expand_scan,
+    )

@@ -1,0 +1,157 @@
+"""Per-architecture smoke tests on REDUCED configs (CPU, tiny dims).
+
+For every one of the 10 assigned architectures:
+  * one forward pass — shape + finiteness
+  * one train step — loss finite, params update
+  * prefill + decode_step consistency vs teacher-forced forward — this
+    exercises the KV ring buffers, mamba recurrent state, MoE routing and
+    the zamba shared block end to end.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config, get_reduced
+from repro.models import transformer
+from repro.models.api import Model
+from repro.launch.train import make_train_step
+from repro.optim import adamw
+
+B, S = 2, 24
+
+
+def _batch(cfg, key, seq=S):
+    tokens = jax.random.randint(key, (B, seq), 0, cfg.vocab, jnp.int32)
+    b = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.n_prefix_tokens:
+        b["prefix_embeds"] = (
+            jax.random.normal(key, (B, cfg.n_prefix_tokens, cfg.d_model)) * 0.02
+        ).astype(jnp.dtype(cfg.dtype))
+    if cfg.family == "audio":
+        b["frames"] = (
+            jax.random.normal(key, (B, max(seq // cfg.enc_len_ratio, 1), cfg.d_model))
+            * 0.02
+        ).astype(jnp.dtype(cfg.dtype))
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    assert cfg.name == arch
+    assert cfg.source
+    # exact assigned dims
+    expect = {
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+        "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "nemotron-4-340b": (96, 18432, 96, 8, 73728, 256000),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "mamba2-2.7b": (64, 2560, 1, 1, 0, 50280),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab)
+    assert got == expect, f"{arch}: {got} != {expect}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_is_small(arch):
+    r = get_reduced(arch)
+    assert r.n_layers <= 2
+    assert r.d_model <= 512
+    assert r.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_smoke(arch):
+    cfg = get_reduced(arch)
+    model = Model.for_config(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits, aux = jax.jit(
+        lambda p, b: model.forward(p, b)
+    )(params, batch)
+    S_total = S + (cfg.n_prefix_tokens or 0)
+    assert logits.shape == (B, S_total, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), "NaN/Inf in logits"
+    assert bool(jnp.isfinite(aux)), "NaN/Inf in aux loss"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = get_reduced(arch)
+    model = Model.for_config(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt_state = adamw.init_state(params)
+    step = jax.jit(make_train_step(model, opt_cfg, remat=True))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    new_params, opt_state, metrics = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    # at least one param changed
+    diffs = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()),
+        params, new_params,
+    )
+    assert max(jax.tree_util.tree_leaves(diffs)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_forward(arch):
+    """decode_step(t) after prefill(t[:n]) must reproduce the teacher-forced
+    forward logits — validates caches (ring buffers, ssm state, shared
+    block) against the non-cached path."""
+    cfg = get_reduced(arch)
+    if cfg.n_experts:
+        # GShard capacity dropping depends on sequence length, so exact
+        # cached/uncached equivalence requires a no-drop capacity factor
+        # (C == S). Dropping itself is causal and exercised elsewhere.
+        import dataclasses
+
+        cfg = dataclasses.replace(
+            cfg, capacity_factor=cfg.n_experts / cfg.top_k
+        )
+    model = Model.for_config(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    n = S - 4  # prefill length; decode the remaining 4 tokens
+
+    full_logits, _ = jax.jit(lambda p, b: model.forward(p, b))(params, batch)
+
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = batch["tokens"][:, :n]
+    last_logits, caches = jax.jit(lambda p, b: model.prefill(p, b))(params, pre_batch)
+
+    P = cfg.n_prefix_tokens or 0
+    np.testing.assert_allclose(
+        np.asarray(last_logits), np.asarray(full_logits[:, P + n - 1]),
+        rtol=2e-4, atol=2e-4,
+    )
+
+    if cfg.family == "audio":
+        caches = {
+            "self": tuple(
+                jnp.pad(c, ((0, 0), (0, 0), (0, S - n), (0, 0), (0, 0)))
+                for c in caches["self"]
+            ),
+            "cross": caches["cross"],
+        }
+    else:
+        caches = transformer.grow_caches(cfg, caches, S + P)
+    decode = jax.jit(
+        lambda p, t, c, pos: model.decode_step(p, t, c, pos)
+    )
+    for i in range(n, S):
+        tok = batch["tokens"][:, i : i + 1]
+        logits, caches = decode(params, tok, caches, jnp.asarray(P + i, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full_logits[:, P + i]),
+            rtol=2e-4, atol=2e-4,
+            err_msg=f"{arch}: decode step {i} diverged from forward",
+        )

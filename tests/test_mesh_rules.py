@@ -1,0 +1,84 @@
+"""Sharding-rule unit tests (pure spec logic; no multi-device runtime)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.launch.mesh import ShardingCtx, make_test_mesh
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class FakeShape:
+        # spec logic only consults mesh.shape; build a 16x16-shaped view
+        shape = {"data": 16, "model": 16}
+        size = 256
+
+    # use a real Mesh but with the logical sizes we care about via a stub
+    return ShardingCtx(_StubMesh(), get_config("qwen3-0.6b"))
+
+
+class _StubMesh:
+    shape = {"data": 16, "model": 16}
+    size = 256
+
+
+def _spec(ctx, shape, tag):
+    return ctx.activation_spec(jnp.zeros(shape) if False else _Arr(shape), tag)
+
+
+class _Arr:
+    def __init__(self, shape):
+        self.shape = shape
+        self.ndim = len(shape)
+
+
+def test_batch_axis_resolution(ctx):
+    assert ctx.batch_axis_for(256) == ("data",)
+    assert ctx.batch_axis_for(1) is None
+    assert ctx.batch_axis_for(32) == ("data",)
+    assert ctx.batch_axis_for(7) is None
+
+
+def test_heads_never_shard_head_dim(ctx):
+    # 40 heads % 16 != 0 -> replicate heads AND head_dim (llama4 case)
+    spec = _spec(ctx, (32, 128, 40, 128), "heads")
+    assert spec == P(("data",), None, None, None)
+    # divisible heads -> shard heads
+    spec = _spec(ctx, (32, 128, 32, 128), "heads")
+    assert spec == P(("data",), None, "model", None)
+
+
+def test_kv_context_parallel_fallback(ctx):
+    # kv=8 not divisible -> shard the sequence dim (context parallel)
+    spec = _spec(ctx, (32, 4096, 8, 128), "kv_heads")
+    assert spec == P(("data",), "model", None, None)
+    # kv=16 divisible -> shard kv heads
+    spec = _spec(ctx, (32, 4096, 16, 128), "kv_heads")
+    assert spec == P(("data",), None, "model", None)
+
+
+def test_seq_parallel_hidden():
+    ctx_sp = ShardingCtx(_StubMesh(), get_config("qwen3-0.6b"), seq_parallel=True)
+    spec = ctx_sp.activation_spec(_Arr((16, 4096, 1024)), "hidden")
+    assert spec == P(("data",), "model", None)
+    # decode (S=1): no seq sharding
+    spec = ctx_sp.activation_spec(_Arr((16, 1, 1024)), "hidden")
+    assert spec == P(("data",), None, None)
+
+
+def test_param_spec_rules(ctx):
+    spec = ctx.param_spec("period/0/attn/wq", _Arr((28, 1024, 1024)))
+    assert spec == P(None, "data", "model")
+    spec = ctx.param_spec("embed", _Arr((151936, 1024)))
+    assert spec == P("model", "data")
+    # moe experts divisible -> expert axis
+    spec = ctx.param_spec("period/0/moe/w_in", _Arr((24, 128, 5120, 8192)))
+    assert spec[1] == "model"  # 128 experts over model
+    # norm scales replicate
+    spec = ctx.param_spec("ln_f", _Arr((1024,)))
+    assert spec == P(None)

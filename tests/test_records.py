@@ -1,0 +1,90 @@
+"""Unit tests for paper §3 definitions + §4.1/§5.1 lower bounds."""
+
+import pytest
+
+from repro.core.records import (
+    TensorUsageRecord,
+    align,
+    make_records,
+    naive_consumption,
+    offsets_lower_bound,
+    operator_breadths,
+    operator_profiles,
+    positional_maximums,
+    shared_objects_lower_bound,
+)
+
+# A small network in the spirit of the paper's Fig. 1/2. Triples are
+# (first_op, last_op, size). Hand-checked numbers below.
+FIG = [
+    (0, 1, 32),  # t0
+    (1, 4, 28),  # t1
+    (2, 3, 36),  # t2
+    (3, 5, 16),  # t3
+    (4, 5, 8),   # t4
+    (5, 7, 64),  # t5
+    (6, 7, 10),  # t6
+]
+
+
+def test_align():
+    assert align(1) == 64
+    assert align(64) == 64
+    assert align(65) == 128
+    assert align(100, 8) == 104
+    with pytest.raises(ValueError):
+        align(10, 0)
+
+
+def test_record_validation():
+    with pytest.raises(ValueError):
+        TensorUsageRecord(first_op=3, last_op=2, size=1)
+    with pytest.raises(ValueError):
+        TensorUsageRecord(first_op=0, last_op=0, size=0)
+
+
+def test_overlap_is_closed_interval():
+    a = TensorUsageRecord(0, 2, 4, tensor_id=0)
+    b = TensorUsageRecord(2, 5, 4, tensor_id=1)
+    c = TensorUsageRecord(3, 5, 4, tensor_id=2)
+    assert a.overlaps(b) and b.overlaps(a)  # touch at op 2 => both live there
+    assert not a.overlaps(c)
+
+
+def test_operator_profiles_and_breadths():
+    recs = make_records(FIG)
+    profiles = operator_profiles(recs)
+    assert len(profiles) == 8
+    # op 0: only t0. op 3: t1, t2, t3 live.
+    assert [r.tensor_id for r in profiles[0]] == [0]
+    assert sorted(r.tensor_id for r in profiles[3]) == [1, 2, 3]
+    # profile sorted by size desc: t2(36), t1(28), t3(16)
+    assert [r.size for r in profiles[3]] == [36, 28, 16]
+    breadths = operator_breadths(recs)
+    assert breadths == [32, 60, 64, 80, 52, 88, 74, 74]
+
+
+def test_positional_maximums_and_bounds():
+    recs = make_records(FIG)
+    pm = positional_maximums(recs)
+    # depth 3 (ops 3 and 5 have 3 live tensors)
+    # col0: max(32,32,36,36,28,64,64,64)=64
+    # col1: max(28,28,28,16,28,16,10,10)=28
+    # col2: max live third-largest: op3 -> 16, op5 -> 8
+    assert pm == [64, 28, 16]
+    assert shared_objects_lower_bound(recs) == 64 + 28 + 16
+    assert offsets_lower_bound(recs) == 88  # op 5: 16+8+64
+    assert naive_consumption(recs) == 32 + 28 + 36 + 16 + 8 + 64 + 10
+
+
+def test_paper_stated_facts_shape():
+    """Sanity on the definitions via the paper's own stated example facts:
+    an operator's breadth is the sum of its profile sizes; the i-th
+    positional maximum is a max over i-th largest profile entries."""
+    recs = make_records([(0, 2, 36), (1, 3, 28), (2, 3, 16), (3, 4, 10)])
+    profiles = operator_profiles(recs)
+    # operator 2 sees 36, 28, 16 -> breadth 80 (paper's op-3 example value)
+    assert sum(r.size for r in profiles[2]) == 80
+    assert operator_breadths(recs)[2] == 80
+    pm = positional_maximums(recs)
+    assert pm[2] == 16  # paper: third positional maximum = max(16,...) = 16

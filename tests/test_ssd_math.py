@@ -1,0 +1,80 @@
+"""SSD chunking math vs the brute-force O(S²) recurrence.
+
+y_t = C_t · ( Σ_{m≤t} exp(Σ_{i=m+1..t} dA_i) · dt_m · B_m ⊗ x_m )  (+ state)
+
+Chaining ssd_chunk_ref across chunks (and the Pallas kernel across chunks)
+must match this exactly — validates the within-chunk decay, the
+inter-chunk state hand-off, and the model's mamba_prefill scan.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ref import ssd_chunk_ref
+from repro.kernels.ssd_chunk import ssd_chunk
+
+
+def brute_force_ssd(x, dt, dA, Bm, Cm, state0):
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    ys = []
+    state = state0.astype(jnp.float64)
+    x64, dt64, dA64 = x.astype(jnp.float64), dt.astype(jnp.float64), dA.astype(jnp.float64)
+    B64, C64 = Bm.astype(jnp.float64), Cm.astype(jnp.float64)
+    for t in range(S):
+        decay = jnp.exp(dA64[:, t])  # (B,H)
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", x64[:, t] * dt64[:, t][..., None], B64[:, t]
+        )
+        ys.append(jnp.einsum("bhpn,bhn->bhp", state, C64[:, t]))
+    return jnp.stack(ys, axis=1), state
+
+
+def _inputs(key, B, S, H, P, N):
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    dA = -jnp.exp(jax.random.normal(ks[2], (B, S, H)) * 0.3) * dt
+    Bm = jax.random.normal(ks[3], (B, S, H, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, S, H, N)) * 0.5
+    state = jax.random.normal(ks[5], (B, H, P, N)) * 0.3
+    return x, dt, dA, Bm, Cm, state
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 32])
+def test_chained_ref_matches_brute_force(chunk):
+    B, S, H, P, N = 1, 64, 2, 8, 4
+    x, dt, dA, Bm, Cm, state = _inputs(jax.random.PRNGKey(0), B, S, H, P, N)
+    want_y, want_state = brute_force_ssd(x, dt, dA, Bm, Cm, state)
+    ys = []
+    st = state
+    for c in range(S // chunk):
+        sl = slice(c * chunk, (c + 1) * chunk)
+        y, st = ssd_chunk_ref(x[:, sl], dt[:, sl], dA[:, sl], Bm[:, sl], Cm[:, sl], st)
+        ys.append(y)
+    got_y = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y, np.float32),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(want_state, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chained_kernel_matches_brute_force():
+    B, S, H, P, N = 1, 64, 2, 8, 4
+    chunk = 16
+    x, dt, dA, Bm, Cm, state = _inputs(jax.random.PRNGKey(1), B, S, H, P, N)
+    want_y, want_state = brute_force_ssd(x, dt, dA, Bm, Cm, state)
+    ys = []
+    st = state
+    for c in range(S // chunk):
+        sl = slice(c * chunk, (c + 1) * chunk)
+        y, st = ssd_chunk(x[:, sl], dt[:, sl], dA[:, sl], Bm[:, sl], Cm[:, sl],
+                          st, interpret=True)
+        ys.append(y)
+    got_y = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y, np.float32),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(want_state, np.float32),
+                               rtol=2e-4, atol=2e-4)

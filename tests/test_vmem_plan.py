@@ -1,0 +1,32 @@
+"""Kernel VMEM budgets via the paper's planner (DESIGN.md §3 item iii)."""
+
+import pytest
+
+from repro.kernels.ops import flash_decode_auto
+from repro.kernels.vmem_plan import VMEM_BYTES, plan_flash_decode_vmem
+
+
+@pytest.mark.parametrize("G,D", [(1, 64), (8, 128), (16, 256)])
+def test_auto_block_sizing_fits_vmem(G, D):
+    """The block_t that flash_decode_auto would pick must plan under the
+    16 MiB VMEM budget with double buffering."""
+    budget = 4 * 2**20
+    per_pos = 2 * D * 2
+    block_t = max(128, min(2048, budget // per_pos // 128 * 128))
+    vp = plan_flash_decode_vmem(G=G, D=D, block_t=block_t)
+    assert vp.fits, vp.summary()
+    # double buffering means >= 2 kv tiles co-resident: plan must be at
+    # least 4 tile sizes (2x k + 2x v) but sharing keeps it well under
+    # naive co-residency of all records
+    assert vp.plan.total_size <= vp.plan.naive_size
+
+
+def test_oversized_block_is_caught():
+    vp = plan_flash_decode_vmem(G=8, D=256, block_t=32768)
+    assert not vp.fits  # 4 x 16 MiB of K/V tiles cannot fit
+
+
+def test_planner_beats_naive_on_kernel_records():
+    vp = plan_flash_decode_vmem(G=8, D=128, block_t=1024)
+    # score/exp tiles and the retiring k/v tiles share offsets
+    assert vp.plan.total_size < vp.plan.naive_size
