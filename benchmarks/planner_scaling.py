@@ -1,13 +1,39 @@
-"""Planner runtime scaling — validates the paper's O(k·n²)/O(k·n·log n)
-complexity discussion on synthetic graphs of growing size."""
+"""Planner runtime scaling: fast interval-set engine vs the frozen oracle.
+
+The paper discusses O(k·n²) vs O(k·n·log n); this benchmark makes the gap
+a tracked number. For growing synthetic graphs it times each strategy on
+both implementations, asserts their totals agree (a last-ditch
+differential check at sizes the test harness doesn't reach), and writes a
+JSON trajectory (``BENCH_planner.json``) consumed by scripts/ci.sh.
+
+Usage:
+    PYTHONPATH=src python benchmarks/planner_scaling.py --quick \
+        --out BENCH_planner.json
+    PYTHONPATH=src python benchmarks/planner_scaling.py --sizes 100 1000
+
+The oracle is skipped above ``--oracle-max-n`` (it is quadratic by
+design); fast-path timings keep scaling beyond it.
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
 import random
 import time
 
-from repro.core import offsets, shared_objects
+from repro.core import baselines, offsets, reference, shared_objects
 from repro.core.records import TensorUsageRecord
+
+STRATEGY_PAIRS = (
+    # (name, fast fn, oracle fn)
+    ("shared_objects/greedy_by_size",
+     shared_objects.greedy_by_size, reference.greedy_by_size),
+    ("offsets/greedy_by_size",
+     offsets.greedy_by_size_offsets, reference.greedy_by_size_offsets),
+    ("offsets/strip_packing_bestfit",
+     baselines.strip_packing_bestfit, reference.strip_packing_bestfit),
+)
 
 
 def synth_records(n: int, seed: int = 0) -> list[TensorUsageRecord]:
@@ -23,7 +49,50 @@ def synth_records(n: int, seed: int = 0) -> list[TensorUsageRecord]:
     return recs
 
 
+def _time(fn, recs) -> tuple[float, int]:
+    t0 = time.perf_counter()
+    total = fn(recs).total_size
+    return time.perf_counter() - t0, total
+
+
+def bench(sizes, *, oracle_max_n: int = 5000, emit=print) -> dict:
+    rows = []
+    for n in sizes:
+        recs = synth_records(n)
+        for name, fast_fn, oracle_fn in STRATEGY_PAIRS:
+            fast_s, fast_total = _time(fast_fn, recs)
+            row = {
+                "n": n,
+                "strategy": name,
+                "fast_s": round(fast_s, 6),
+                "total_size": fast_total,
+            }
+            if n <= oracle_max_n:
+                oracle_s, oracle_total = _time(oracle_fn, recs)
+                if oracle_total != fast_total:
+                    raise AssertionError(
+                        f"{name} n={n}: fast total {fast_total} != "
+                        f"oracle {oracle_total} — differential violation"
+                    )
+                row["oracle_s"] = round(oracle_s, 6)
+                row["speedup"] = round(oracle_s / max(fast_s, 1e-9), 2)
+            rows.append(row)
+            emit(
+                f"{name} n={n}: fast {fast_s * 1e3:.1f} ms"
+                + (
+                    f", oracle {row['oracle_s'] * 1e3:.1f} ms "
+                    f"({row['speedup']}x)"
+                    if "oracle_s" in row
+                    else " (oracle skipped)"
+                )
+                + f", total={fast_total}"
+            )
+    return {"bench": "planner_scaling", "rows": rows}
+
+
 def run(emit=print) -> None:
+    """Back-compat entry for benchmarks/run.py: small fast-only sweep in
+    the historical ``name,us_per_call,derived`` CSV shape."""
     emit("name,us_per_call,derived")
     for n in (100, 300, 1000, 3000):
         recs = synth_records(n)
@@ -31,7 +100,26 @@ def run(emit=print) -> None:
             ("gbs_shared_objects", shared_objects.greedy_by_size),
             ("gbs_offsets", offsets.greedy_by_size_offsets),
         ):
-            t0 = time.perf_counter()
-            total = fn(recs).total_size
-            dt = (time.perf_counter() - t0) * 1e6
-            emit(f"{name}_n{n},{dt:.0f},total={total}")
+            dt, total = _time(fn, recs)
+            emit(f"{name}_n{n},{dt * 1e6:.0f},total={total}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI sweep: n in (500, 2000, 5000)")
+    ap.add_argument("--sizes", type=int, nargs="*", default=None)
+    ap.add_argument("--oracle-max-n", type=int, default=5000)
+    ap.add_argument("--out", default=None, help="write JSON results here")
+    args = ap.parse_args()
+    sizes = args.sizes or ((500, 2000, 5000) if args.quick
+                           else (100, 300, 1000, 3000, 5000, 10000))
+    result = bench(sizes, oracle_max_n=args.oracle_max_n)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 CI: full test suite, then the tracked planner-scaling benchmark.
+#
+#   ./scripts/ci.sh            # everything
+#   SKIP_BENCH=1 ./scripts/ci.sh   # tests only
+#
+# BENCH_planner.json (n, wall-seconds per strategy fast vs oracle,
+# total_size, speedup) is the committed perf trajectory — regenerate it
+# here so planner regressions show up in review diffs.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -q
+
+if [[ -z "${SKIP_BENCH:-}" ]]; then
+    python benchmarks/planner_scaling.py --quick --out BENCH_planner.json
+fi

@@ -2,15 +2,59 @@
 
 Public API:
     records      — usage records, profiles, breadths, lower bounds
+    interval_set — shared overlap engine: DisjointIntervalSet (per-object
+                   disjoint intervals, O(log n) fit/gap), IntervalTree
+                   (balanced, max-endpoint augmented), BestFitArena
+                   (incremental Algorithm-3 gap search)
     shared_objects — Greedy-by-Size / -Improved / Greedy-by-Breadth (paper §4)
     offsets      — Greedy-by-Size / Greedy-by-Breadth offsets (paper §5)
     baselines    — naive, TFLite Greedy, min-cost flow, strip packing
     planner      — MemoryPlan facade (auto strategy selection per paper §6)
+    plan_io      — versioned plan JSON + content-addressed plan cache
+    reference    — FROZEN seed implementations (the differential oracle)
     optimal      — exact branch-and-bound (beyond paper)
     order_search — topological-order optimization (paper §7.1 future work)
+
+Oracle-vs-fast contract
+    ``reference`` preserves the seed's naive O(k·n²) strategies, with
+    their own local copies of every derived quantity. The fast strategies
+    are pure data-structure swaps over ``interval_set`` with iteration
+    order and tie-breaking preserved EXACTLY, so for every strategy with
+    a frozen twin the assignments/offsets — not merely the totals — must
+    be identical on any record set. ``tests/test_differential_planner.py``
+    enforces this over hundreds of randomized graphs plus all model
+    configs; ``benchmarks/planner_scaling.py`` re-checks totals at sizes
+    the test harness doesn't reach. A new strategy lands its frozen twin
+    in ``reference`` BEFORE its fast implementation.
+
+Plan-cache keying
+    Planning is pure: output = f(records, mode, strategy). The cache key
+    (``plan_io.plan_signature``) is a sha256 over the format version, the
+    mode, the strategy string, and the records canonicalized in tensor_id
+    order. Alignment needs no explicit
+    key component — it is baked into the record sizes ``plan_graph``
+    hashes. ``"auto"`` keys additionally spell out the evaluated
+    portfolio, and every key includes ``plan_io.PLANNER_REVISION`` (bump
+    it whenever a strategy's output may change), so persisted caches
+    self-invalidate on planner upgrades. Graph names are excluded
+    (identical graphs share one entry; plans are re-labelled on cache
+    hit). The default cache is in-memory; point ``REPRO_PLAN_CACHE_DIR``
+    at a directory for a shared, atomically-written disk tier (the
+    variable is re-read on every planning call, not frozen at import).
 """
 
 from repro.core.graph import Graph, GraphBuilder, Op, TensorSpec
+from repro.core.interval_set import BestFitArena, DisjointIntervalSet, IntervalTree
+from repro.core.plan_io import (
+    PLAN_FORMAT_VERSION,
+    PLANNER_REVISION,
+    PlanCache,
+    load_plan,
+    plan_from_json,
+    plan_signature,
+    plan_to_json,
+    save_plan,
+)
 from repro.core.planner import (
     MemoryPlan,
     OFFSET_STRATEGIES,
@@ -35,6 +79,17 @@ __all__ = [
     "GraphBuilder",
     "Op",
     "TensorSpec",
+    "BestFitArena",
+    "DisjointIntervalSet",
+    "IntervalTree",
+    "PLAN_FORMAT_VERSION",
+    "PLANNER_REVISION",
+    "PlanCache",
+    "load_plan",
+    "plan_from_json",
+    "plan_signature",
+    "plan_to_json",
+    "save_plan",
     "MemoryPlan",
     "OFFSET_STRATEGIES",
     "SHARED_OBJECT_STRATEGIES",

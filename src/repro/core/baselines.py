@@ -25,7 +25,8 @@ import heapq
 from collections import deque
 from typing import Sequence
 
-from repro.core.offsets import OffsetAssignment, _best_fit_offset
+from repro.core.interval_set import BestFitArena
+from repro.core.offsets import OffsetAssignment
 from repro.core.records import TensorUsageRecord
 from repro.core.shared_objects import (
     SharedObject,
@@ -100,17 +101,11 @@ def tflite_greedy_in_order_offsets(
     records: Sequence[TensorUsageRecord],
 ) -> OffsetAssignment:
     """Lee'19 'Greedy' adapted to offsets: execution order + best-fit gap."""
-    offsets: dict[int, int] = {}
-    allocated: list[TensorUsageRecord] = []
-    total = 0
+    arena = BestFitArena()
     order = sorted(records, key=lambda r: (r.first_op, -r.size, r.tensor_id))
     for rec in order:
-        off = _best_fit_offset(rec, allocated, offsets)
-        offsets[rec.tensor_id] = off
-        total = max(total, off + rec.size)
-        allocated.append(rec)
-        allocated.sort(key=lambda r: (offsets[r.tensor_id], r.tensor_id))
-    return OffsetAssignment("tflite_greedy_in_order", offsets, total)
+        arena.place(rec)
+    return OffsetAssignment("tflite_greedy_in_order", arena.offsets, arena.total)
 
 
 # ------------------------------------------------- min-cost flow (Lee'19)
@@ -231,26 +226,8 @@ def strip_packing_bestfit(
 ) -> OffsetAssignment:
     """Best-fit-decreasing strip packing: size-descending order, each tensor
     placed at the lowest feasible offset (first-fit over the gap list)."""
-    offsets: dict[int, int] = {}
-    allocated: list[TensorUsageRecord] = []
-    total = 0
+    arena = BestFitArena(first_fit=True)
     order = sorted(records, key=lambda r: (-r.size, r.first_op, r.tensor_id))
     for rec in order:
-        # lowest feasible offset: scan overlapping tensors by offset and
-        # take the FIRST gap that fits (vs the paper's smallest gap)
-        prev_offset = 0
-        placed_off: int | None = None
-        for x in allocated:
-            if rec.overlaps(x):
-                x_off = offsets[x.tensor_id]
-                if x_off - prev_offset >= rec.size:
-                    placed_off = prev_offset
-                    break
-                prev_offset = max(prev_offset, x_off + x.size)
-        if placed_off is None:
-            placed_off = prev_offset
-        offsets[rec.tensor_id] = placed_off
-        total = max(total, placed_off + rec.size)
-        allocated.append(rec)
-        allocated.sort(key=lambda r: (offsets[r.tensor_id], r.tensor_id))
-    return OffsetAssignment("strip_packing_bestfit", offsets, total)
+        arena.place(rec)
+    return OffsetAssignment("strip_packing_bestfit", arena.offsets, arena.total)

@@ -22,29 +22,34 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from repro.core.offsets import OffsetAssignment, _best_fit_offset
+from repro.core.interval_set import BestFitArena
+from repro.core.offsets import OffsetAssignment
 from repro.core.records import TensorUsageRecord, naive_consumption
 
 
 @dataclasses.dataclass
 class IncrementalPlanner:
-    offsets: dict[int, int] = dataclasses.field(default_factory=dict)
-    total_size: int = 0
+    _arena: BestFitArena = dataclasses.field(default_factory=BestFitArena)
     _allocated: list[TensorUsageRecord] = dataclasses.field(default_factory=list)
     n_stages: int = 0
+
+    @property
+    def offsets(self) -> dict[int, int]:
+        return self._arena.offsets
+
+    @property
+    def total_size(self) -> int:
+        return self._arena.total
 
     def extend(self, records: Sequence[TensorUsageRecord]) -> None:
         """Plan a newly-known batch of records against the fixed layout."""
         self.n_stages += 1
         order = sorted(records, key=lambda r: (-r.size, r.first_op, r.tensor_id))
         for rec in order:
-            if rec.tensor_id in self.offsets:
+            if rec.tensor_id in self._arena.offsets:
                 raise ValueError(f"tensor {rec.tensor_id} already planned")
-            off = _best_fit_offset(rec, self._allocated, self.offsets)
-            self.offsets[rec.tensor_id] = off
-            self.total_size = max(self.total_size, off + rec.size)
+            self._arena.place(rec)
             self._allocated.append(rec)
-            self._allocated.sort(key=lambda r: (self.offsets[r.tensor_id], r.tensor_id))
 
     def as_assignment(self) -> OffsetAssignment:
         return OffsetAssignment(

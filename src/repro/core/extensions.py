@@ -14,49 +14,59 @@ minimum; generalizes the paper's §6 "evaluate both" advice.
 
 from __future__ import annotations
 
+import bisect
 from typing import Sequence
 
 from repro.core import baselines, offsets, shared_objects
 from repro.core.offsets import OffsetAssignment, from_shared_objects
 from repro.core.records import TensorUsageRecord
 from repro.core.shared_objects import (
-    SharedObject,
     SharedObjectsAssignment,
-    _create_object,
     _new_assignment,
+    _ObjectPool,
+    _pool_select_is_better,
 )
+
+
+def conflict_mass(records: Sequence[TensorUsageRecord]) -> dict[int, int]:
+    """For each tensor, the total size of the tensors overlapping it.
+
+    Sorted-event formulation (no pairwise scan): ``b`` overlaps ``a`` iff
+    ``first_b <= last_a`` and ``last_b >= first_a``, so the overlap mass is
+    (sum of sizes with first <= last_a) − (sum of sizes with last < first_a)
+    − size_a, each term a prefix sum over a sorted key array.
+    """
+    firsts = sorted((r.first_op, r.size) for r in records)
+    lasts = sorted((r.last_op, r.size) for r in records)
+    first_keys = [f for f, _ in firsts]
+    last_keys = [l for l, _ in lasts]
+    first_cum = [0]
+    for _, s in firsts:
+        first_cum.append(first_cum[-1] + s)
+    last_cum = [0]
+    for _, s in lasts:
+        last_cum.append(last_cum[-1] + s)
+    out: dict[int, int] = {}
+    for r in records:
+        started = first_cum[bisect.bisect_right(first_keys, r.last_op)]
+        retired = last_cum[bisect.bisect_left(last_keys, r.first_op)]
+        out[r.tensor_id] = started - retired - r.size
+    return out
 
 
 def greedy_by_conflict(
     records: Sequence[TensorUsageRecord],
 ) -> SharedObjectsAssignment:
     records = list(records)
-    conflict = {r.tensor_id: 0 for r in records}
-    for i, a in enumerate(records):
-        for b in records[i + 1 :]:
-            if a.overlaps(b):
-                conflict[a.tensor_id] += b.size
-                conflict[b.tensor_id] += a.size
+    conflict = conflict_mass(records)
     order = sorted(
         records,
         key=lambda r: (-(conflict[r.tensor_id] + r.size), -r.size, r.tensor_id),
     )
     asn = _new_assignment("greedy_by_conflict")
+    pool = _ObjectPool()
     for rec in order:
-        best: SharedObject | None = None
-        for obj in asn.objects:
-            if not obj.fits(rec):
-                continue
-            if best is None:
-                best = obj
-            elif best.size < rec.size:
-                if obj.size > best.size:
-                    best = obj
-            elif rec.size <= obj.size < best.size:
-                best = obj
-        if best is None:
-            best = _create_object(asn, rec)
-        best.assign(rec)
+        best = _pool_select_is_better(asn, pool, rec)
         asn.assignment[rec.tensor_id] = best.object_id
     return asn
 

@@ -9,6 +9,12 @@ Objective: minimize ``max(offset_t + size_t)``.
   gap logic)
 * ``from_shared_objects``       — §5: any Shared Objects solution converts
   by laying the objects out contiguously.
+
+The gap search runs on :class:`repro.core.interval_set.BestFitArena`: an
+interval tree narrows each placement to the already-placed records that
+actually overlap the new tensor's lifetime, instead of the seed's rescan
+of every placed record (O(n²) total, preserved as the oracle in
+:mod:`repro.core.reference`). Placement results are byte-identical.
 """
 
 from __future__ import annotations
@@ -16,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Sequence
 
+from repro.core.interval_set import BestFitArena
 from repro.core.records import (
     TensorUsageRecord,
     operator_breadths,
@@ -35,49 +42,15 @@ class OffsetAssignment:
         return self.offsets[tensor_id]
 
 
-def _best_fit_offset(
-    rec: TensorUsageRecord,
-    allocated: list[TensorUsageRecord],
-    offsets: dict[int, int],
-) -> int:
-    """Paper Algorithm 3 L.7–20: scan already-allocated, interval-overlapping
-    tensors in increasing offset order; take the smallest gap that fits,
-    else append after the rightmost overlapping tensor.
-
-    ``allocated`` must be sorted by offset (the paper's
-    ``ordered_allocated_ids``).
-    """
-    prev_offset = 0
-    best_offset: int | None = None
-    smallest_gap = None
-    for x in allocated:
-        if rec.overlaps(x):
-            x_off = offsets[x.tensor_id]
-            gap = x_off - prev_offset
-            if gap >= rec.size and (smallest_gap is None or gap < smallest_gap):
-                smallest_gap = gap
-                best_offset = prev_offset
-            prev_offset = max(prev_offset, x_off + x.size)
-    if best_offset is None:
-        best_offset = prev_offset
-    return best_offset
-
-
 def greedy_by_size_offsets(
     records: Sequence[TensorUsageRecord],
 ) -> OffsetAssignment:
     """Paper §5.2, Algorithm 3."""
-    offsets: dict[int, int] = {}
-    allocated: list[TensorUsageRecord] = []  # kept sorted by offset
-    total = 0
+    arena = BestFitArena()
     order = sorted(records, key=lambda r: (-r.size, r.first_op, r.tensor_id))
     for rec in order:
-        off = _best_fit_offset(rec, allocated, offsets)
-        offsets[rec.tensor_id] = off
-        total = max(total, off + rec.size)
-        allocated.append(rec)
-        allocated.sort(key=lambda r: (offsets[r.tensor_id], r.tensor_id))
-    return OffsetAssignment("greedy_by_size", offsets, total)
+        arena.place(rec)
+    return OffsetAssignment("greedy_by_size", arena.offsets, arena.total)
 
 
 def greedy_by_breadth_offsets(
@@ -85,22 +58,16 @@ def greedy_by_breadth_offsets(
 ) -> OffsetAssignment:
     """Paper §5.3: operators in non-increasing breadth order; within each
     profile, unassigned tensors largest-first; same best-fit gap logic."""
-    offsets: dict[int, int] = {}
-    allocated: list[TensorUsageRecord] = []
-    total = 0
+    arena = BestFitArena()
     breadths = operator_breadths(records)
     profiles = operator_profiles(records)
     op_order = sorted(range(len(breadths)), key=lambda i: (-breadths[i], i))
     for op_idx in op_order:
         for rec in profiles[op_idx]:  # size-descending inside the profile
-            if rec.tensor_id in offsets:
+            if rec.tensor_id in arena.offsets:
                 continue
-            off = _best_fit_offset(rec, allocated, offsets)
-            offsets[rec.tensor_id] = off
-            total = max(total, off + rec.size)
-            allocated.append(rec)
-            allocated.sort(key=lambda r: (offsets[r.tensor_id], r.tensor_id))
-    return OffsetAssignment("greedy_by_breadth", offsets, total)
+            arena.place(rec)
+    return OffsetAssignment("greedy_by_breadth", arena.offsets, arena.total)
 
 
 def from_shared_objects(asn: SharedObjectsAssignment) -> OffsetAssignment:

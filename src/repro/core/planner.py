@@ -5,6 +5,13 @@ Implements the paper's §6 deployment recommendations:
 * Offset Calculation engines: evaluate Greedy-by-Size AND Strip-Packing
   Best-fit before first inference, pick the smaller (§6 last paragraph).
 ``strategy="auto"`` runs every known strategy and returns the best.
+
+Every ``plan_records``/``plan_graph`` call consults the content-addressed
+plan cache (:mod:`repro.core.plan_io`): the signature covers the record
+set, mode and strategy, so repeat engine construction and auto-strategy
+sweeps over an unchanged graph return the stored plan (``cache_hit=True``)
+without re-running any strategy. Pass ``use_cache=False`` to force a
+fresh run, or ``cache=`` to use a private :class:`~repro.core.plan_io.PlanCache`.
 """
 
 from __future__ import annotations
@@ -13,7 +20,7 @@ import dataclasses
 import time
 from typing import Callable, Literal, Sequence
 
-from repro.core import baselines, offsets, shared_objects
+from repro.core import baselines, offsets, plan_io, shared_objects
 from repro.core.graph import Graph
 from repro.core.offsets import OffsetAssignment, from_shared_objects
 from repro.core.records import (
@@ -55,6 +62,27 @@ OFFSET_STRATEGIES: dict[
 
 _register_extensions()
 
+# The strategy portfolios "auto" evaluates, by mode. Named here (not
+# inline) because the cache key spells them out: adding a strategy to a
+# portfolio must invalidate previously cached auto plans.
+AUTO_SHARED_OBJECT_PORTFOLIO: tuple[str, ...] = tuple(shared_objects.STRATEGIES)
+AUTO_OFFSET_PORTFOLIO: tuple[str, ...] = (
+    "greedy_by_size",
+    "greedy_by_breadth",
+    "strip_packing_bestfit",
+)
+
+
+def _cache_strategy_key(mode: Mode, strategy: str) -> str:
+    if strategy != "auto":
+        return strategy
+    portfolio = (
+        AUTO_SHARED_OBJECT_PORTFOLIO
+        if mode == "shared_objects"
+        else AUTO_OFFSET_PORTFOLIO
+    )
+    return "auto[" + ",".join(sorted(portfolio)) + "]"
+
 
 @dataclasses.dataclass
 class MemoryPlan:
@@ -69,6 +97,9 @@ class MemoryPlan:
     naive_size: int
     plan_wall_s: float
     shared_objects: SharedObjectsAssignment | None = None
+    # True when this plan came out of the plan cache instead of a strategy
+    # run (not serialized; see plan_io).
+    cache_hit: bool = False
 
     @property
     def reduction_vs_naive(self) -> float:
@@ -93,15 +124,34 @@ def plan_records(
     mode: Mode = "offsets",
     strategy: str = "auto",
     graph_name: str = "records",
+    cache: plan_io.PlanCache | None = None,
+    use_cache: bool = True,
 ) -> MemoryPlan:
     records = list(records)
     t0 = time.perf_counter()
+    key: str | None = None
+    if use_cache:
+        cache = cache if cache is not None else plan_io.default_cache()
+        key = plan_io.plan_signature(
+            records, mode=mode, strategy=_cache_strategy_key(mode, strategy)
+        )
+        hit = cache.get(key)
+        if hit is not None:
+            return dataclasses.replace(
+                hit,
+                graph_name=graph_name,
+                plan_wall_s=time.perf_counter() - t0,
+                cache_hit=True,
+            )
     so: SharedObjectsAssignment | None = None
     if mode == "shared_objects":
         lb = shared_objects_lower_bound(records)
         if strategy == "auto":
             # paper: GBS-Improved is the recommended default, but evaluate all
-            cands = [fn(records) for fn in shared_objects.STRATEGIES.values()]
+            cands = [
+                shared_objects.STRATEGIES[name](records)
+                for name in AUTO_SHARED_OBJECT_PORTFOLIO
+            ]
             so = min(cands, key=lambda a: a.total_size)
         else:
             so = SHARED_OBJECT_STRATEGIES[strategy](records)
@@ -113,16 +163,15 @@ def plan_records(
             # paper §6: evaluate GBS and Strip-Packing Best-fit, pick best;
             # we also throw in GBB for completeness.
             cands = [
-                offsets.greedy_by_size_offsets(records),
-                offsets.greedy_by_breadth_offsets(records),
-                baselines.strip_packing_bestfit(records),
+                OFFSET_STRATEGIES[name](records)
+                for name in AUTO_OFFSET_PORTFOLIO
             ]
             off = min(cands, key=lambda a: a.total_size)
         else:
             off = OFFSET_STRATEGIES[strategy](records)
         name = off.strategy
     wall = time.perf_counter() - t0
-    return MemoryPlan(
+    plan = MemoryPlan(
         graph_name=graph_name,
         strategy=name,
         records=records,
@@ -133,6 +182,9 @@ def plan_records(
         plan_wall_s=wall,
         shared_objects=so,
     )
+    if key is not None and cache is not None:
+        cache.put(key, plan)
+    return plan
 
 
 def plan_graph(
@@ -141,10 +193,16 @@ def plan_graph(
     mode: Mode = "offsets",
     strategy: str = "auto",
     alignment: int = DEFAULT_ALIGNMENT,
+    cache: plan_io.PlanCache | None = None,
+    use_cache: bool = True,
 ) -> MemoryPlan:
+    # alignment needs no explicit cache key: it is baked into the record
+    # sizes the signature hashes
     return plan_records(
         graph.usage_records(alignment),
         mode=mode,
         strategy=strategy,
         graph_name=graph.name,
+        cache=cache,
+        use_cache=use_cache,
     )

@@ -88,12 +88,21 @@ def operator_profiles(
 
 
 def operator_breadths(records: Sequence[TensorUsageRecord]) -> list[int]:
-    """breadths[i] = sum of live tensor sizes at operator i."""
+    """breadths[i] = sum of live tensor sizes at operator i.
+
+    Event sweep (difference array + prefix sum): O(n + n_ops) instead of
+    walking every record's full interval.
+    """
     n_ops = num_operators(records)
-    breadths = [0] * n_ops
+    delta = [0] * (n_ops + 1)
     for r in records:
-        for op in range(r.first_op, r.last_op + 1):
-            breadths[op] += r.size
+        delta[r.first_op] += r.size
+        delta[r.last_op + 1] -= r.size
+    breadths = [0] * n_ops
+    acc = 0
+    for i in range(n_ops):
+        acc += delta[i]
+        breadths[i] = acc
     return breadths
 
 

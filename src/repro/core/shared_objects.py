@@ -13,10 +13,15 @@ Three strategies from the paper:
 
 All return a :class:`SharedObjectsAssignment`.
 
-Complexity: the naive inner loop over all records per (tensor, object) pair
-is the paper's O(k·n²). We keep per-object interval lists sorted by
-``first_op`` and binary-search the neighborhood, which is the paper's
-"interval tree" refinement giving O(k·n·log n) in practice.
+Complexity: the paper's naive formulation is O(k·n²). Here every
+per-object overlap/gap query goes through
+:class:`repro.core.interval_set.DisjointIntervalSet` (one ``bisect``, the
+paper's "interval tree" refinement made exact: an object's intervals are
+disjoint, so only the query's immediate neighbor can conflict) and object
+*selection* walks a pool kept sorted by ``(size, object_id)`` instead of
+scanning every object. Results are byte-identical to the frozen oracle in
+:mod:`repro.core.reference` — tie-breaking is preserved exactly — which
+``tests/test_differential_planner.py`` enforces.
 """
 
 from __future__ import annotations
@@ -25,6 +30,7 @@ import bisect
 import dataclasses
 from typing import Callable, Sequence
 
+from repro.core.interval_set import DisjointIntervalSet
 from repro.core.records import (
     TensorUsageRecord,
     operator_breadths,
@@ -37,45 +43,29 @@ from repro.core.records import (
 class SharedObject:
     object_id: int
     size: int
-    # intervals sorted by first_op: (first_op, last_op, tensor_id)
-    intervals: list[tuple[int, int, int]] = dataclasses.field(default_factory=list)
+    interval_set: DisjointIntervalSet = dataclasses.field(
+        default_factory=DisjointIntervalSet
+    )
+
+    @property
+    def intervals(self) -> list[tuple[int, int, int]]:
+        """Assigned (first_op, last_op, tensor_id), sorted by first_op."""
+        return list(self.interval_set)
 
     def fits(self, rec: TensorUsageRecord) -> bool:
         """True iff ``rec``'s interval intersects no assigned interval."""
-        starts = [iv[0] for iv in self.intervals]
-        idx = bisect.bisect_right(starts, rec.last_op)
-        # Any interval starting after rec.last_op cannot overlap. Intervals
-        # before idx start at or before rec.last_op; they overlap iff their
-        # last_op >= rec.first_op. Check those — but we can't binary search
-        # on last_op (not sorted), so walk left. In DNN graphs intervals are
-        # short, so this neighborhood walk is effectively O(log n + overlap).
-        for i in range(idx - 1, -1, -1):
-            f, l, _ = self.intervals[i]
-            if l >= rec.first_op:
-                return False
-            # Cannot early-break on f alone (last_ops are unsorted), keep
-            # walking; in practice assigned intervals rarely nest deeply.
-        return True
+        return not self.interval_set.overlaps(rec.first_op, rec.last_op)
 
     def assign(self, rec: TensorUsageRecord) -> None:
-        starts = [iv[0] for iv in self.intervals]
-        idx = bisect.bisect_left(starts, rec.first_op)
-        self.intervals.insert(idx, (rec.first_op, rec.last_op, rec.tensor_id))
-        self.size = max(self.size, rec.size)
+        self.interval_set.add(rec.first_op, rec.last_op, rec.tensor_id)
+        if rec.size > self.size:
+            self.size = rec.size
 
     def gap_to(self, rec: TensorUsageRecord) -> int:
         """Smallest idle gap this object would have right before/after
         ``rec``'s interval (paper §4.4's pairing criterion). Infinite-ish if
         the object is empty."""
-        if not self.intervals:
-            return 1 << 60
-        best = 1 << 60
-        for f, l, _ in self.intervals:
-            if l < rec.first_op:
-                best = min(best, rec.first_op - l - 1)
-            elif f > rec.last_op:
-                best = min(best, f - rec.last_op - 1)
-        return best
+        return self.interval_set.smallest_gap(rec.first_op, rec.last_op)
 
 
 @dataclasses.dataclass
@@ -103,6 +93,85 @@ def _create_object(asn: SharedObjectsAssignment, rec: TensorUsageRecord) -> Shar
     return obj
 
 
+class _ObjectPool:
+    """Objects kept sorted ascending by ``(size, object_id)``.
+
+    Selection rules become ordered scans from a bisect point instead of
+    full sweeps; the scan still stops at the first *fitting* object, so the
+    worst case matches the naive loop but the common case touches O(1)
+    objects after an O(log k) bisect.
+    """
+
+    __slots__ = ("_keys", "_objs")
+
+    def __init__(self) -> None:
+        self._keys: list[tuple[int, int]] = []
+        self._objs: list[SharedObject] = []
+
+    def add(self, obj: SharedObject) -> None:
+        k = (obj.size, obj.object_id)
+        i = bisect.bisect_left(self._keys, k)
+        self._keys.insert(i, k)
+        self._objs.insert(i, obj)
+
+    def remove(self, obj: SharedObject) -> None:
+        i = bisect.bisect_left(self._keys, (obj.size, obj.object_id))
+        del self._keys[i]
+        del self._objs[i]
+
+    def smallest_fitting(self, rec: TensorUsageRecord) -> SharedObject | None:
+        """Smallest (then lowest-id) object with size >= rec.size that fits
+        — the Greedy-by-Size selection (all pool sizes >= rec.size there)
+        and the first branch of Greedy-by-Breadth's ``is_better``."""
+        start = bisect.bisect_left(self._keys, (rec.size, -1))
+        for i in range(start, len(self._objs)):
+            if self._objs[i].fits(rec):
+                return self._objs[i]
+        return None
+
+    def largest_smaller_fitting(self, rec: TensorUsageRecord) -> SharedObject | None:
+        """Largest (then lowest-id) object with size < rec.size that fits —
+        Greedy-by-Breadth's grow-the-biggest fallback branch."""
+        i = bisect.bisect_left(self._keys, (rec.size, -1)) - 1
+        while i >= 0:
+            if self._objs[i].fits(rec):
+                best = self._objs[i]
+                # equal-size ties break on LOWEST object id (the oracle
+                # scans ids ascending and only replaces on strictly-larger
+                # size); walk the tie run down to find it
+                j = i - 1
+                while j >= 0 and self._objs[j].size == best.size:
+                    if self._objs[j].fits(rec):
+                        best = self._objs[j]
+                    j -= 1
+                return best
+            i -= 1
+        return None
+
+
+def _pool_select_is_better(
+    asn: SharedObjectsAssignment, pool: _ObjectPool, rec: TensorUsageRecord
+) -> SharedObject:
+    """The paper's ``is_better`` object choice (§4.2 L.11–17) with pool
+    bookkeeping: smallest fitting object >= size_t, else grow the largest
+    smaller one, else create. Shared by greedy_by_breadth and
+    extensions.greedy_by_conflict — the tie-break contract with the frozen
+    oracle lives in exactly one place."""
+    best = pool.smallest_fitting(rec)
+    if best is not None:
+        best.assign(rec)
+        return best
+    best = pool.largest_smaller_fitting(rec)
+    if best is None:
+        best = _create_object(asn, rec)
+        best.assign(rec)
+    else:
+        pool.remove(best)  # assign() below may grow its size
+        best.assign(rec)
+    pool.add(best)
+    return best
+
+
 def greedy_by_size(
     records: Sequence[TensorUsageRecord],
 ) -> SharedObjectsAssignment:
@@ -113,14 +182,15 @@ def greedy_by_size(
     non-increasing); create a new object if none is suitable.
     """
     asn = _new_assignment("greedy_by_size")
+    pool = _ObjectPool()
     order = sorted(records, key=lambda r: (-r.size, r.first_op, r.tensor_id))
     for rec in order:
-        best: SharedObject | None = None
-        for obj in asn.objects:
-            if obj.fits(rec) and (best is None or obj.size < best.size):
-                best = obj
+        best = pool.smallest_fitting(rec)
         if best is None:
             best = _create_object(asn, rec)
+            pool.add(best)
+        # sizes arrive non-increasing, so assign() never grows an object
+        # here and the pool order stays valid
         best.assign(rec)
         asn.assignment[rec.tensor_id] = best.object_id
     return asn
@@ -139,6 +209,7 @@ def greedy_by_breadth(
       * else create a new object.
     """
     asn = _new_assignment("greedy_by_breadth")
+    pool = _ObjectPool()
     breadths = operator_breadths(records)
     profiles = operator_profiles(records)
     op_order = sorted(range(len(breadths)), key=lambda i: (-breadths[i], i))
@@ -146,24 +217,7 @@ def greedy_by_breadth(
         for rec in profiles[op_idx]:  # already sorted by size desc
             if rec.tensor_id in asn.assignment:
                 continue
-            best: SharedObject | None = None
-            for obj in asn.objects:
-                if not obj.fits(rec):
-                    continue
-                if best is None:
-                    best = obj
-                    continue
-                if best.size < rec.size:
-                    # best is too small: prefer larger objects (less growth)
-                    if obj.size > best.size:
-                        best = obj
-                else:
-                    # best already fits rec: prefer the smallest that fits
-                    if rec.size <= obj.size < best.size:
-                        best = obj
-            if best is None:
-                best = _create_object(asn, rec)
-            best.assign(rec)
+            best = _pool_select_is_better(asn, pool, rec)
             asn.assignment[rec.tensor_id] = best.object_id
     return asn
 
@@ -217,6 +271,9 @@ def greedy_by_size_improved(
 def _greedy_by_size_improved_staged(
     records: Sequence[TensorUsageRecord],
 ) -> SharedObjectsAssignment:
+    # Pair selection scans (pending × objects) like the oracle — the
+    # iteration order IS the tie-break rule — but each fits/gap probe is
+    # one bisect instead of an interval walk.
     asn = _new_assignment("greedy_by_size_improved")
     for stage in _stages_by_positional_maximums(records):
         pending = list(stage)

@@ -78,7 +78,7 @@ def ssd_chunk(
             jax.ShapeDtypeStruct((B, L, H, P), x.dtype),
             jax.ShapeDtypeStruct((B, H, P, N), state.dtype),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

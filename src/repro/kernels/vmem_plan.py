@@ -31,7 +31,8 @@ class KernelVmemPlan:
             f"{self.plan.graph_name}: {self.plan.total_size / 2**10:.0f} KiB "
             f"of {self.budget / 2**20:.0f} MiB VMEM "
             f"({'fits' if self.fits else 'OVER BUDGET'}; "
-            f"naive co-residency {self.plan.naive_size / 2**10:.0f} KiB)"
+            f"naive co-residency {self.plan.naive_size / 2**10:.0f} KiB"
+            f"{'; cached plan' if self.plan.cache_hit else ''})"
         )
 
 

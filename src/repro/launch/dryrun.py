@@ -15,9 +15,16 @@ For each combination we ``jit(step).lower(specs).compile()`` with the
 arch's sharding rules, print ``memory_analysis()`` (proves per-device fit)
 and ``cost_analysis()`` + HLO collective bytes (feeds §Roofline).
 
+``--activation-plan`` additionally traces each step's jaxpr (shape-level;
+params are never materialized) through the paper's planner and reports the
+planned activation-arena size next to XLA's temp allocation. Plans are
+served from the content-addressed plan cache (core/plan_io), so sweeping
+``--all`` re-plans each unique graph once; set ``REPRO_PLAN_CACHE_DIR``
+to persist plans across runs.
+
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
-        --shape train_4k [--multi-pod] [--json out.json]
+        --shape train_4k [--multi-pod] [--activation-plan] [--json out.json]
     PYTHONPATH=src python -m repro.launch.dryrun --all
 """
 
@@ -32,7 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ARCH_IDS, get_config
-from repro.launch.hlo_analysis import analyze as analyze_hlo
+from repro.launch.hlo_analysis import analyze as analyze_hlo, xla_cost_analysis
 from repro.launch.mesh import ShardingCtx, make_production_mesh
 from repro.launch.roofline import Roofline, model_flops
 from repro.launch.train import make_train_step
@@ -114,8 +121,31 @@ def build_step(arch: str, shape_name: str, mesh, *, seq_parallel: bool = False):
     return (jitted, (params_shape, tok, cache_shape, pos, act)), None
 
 
+def planner_report(jitted, specs, name: str) -> dict:
+    """Trace the step's jaxpr and run the paper's planner on it.
+
+    ``trace_graph`` on the jitted callable works on ShapeDtypeStructs (no
+    parameter materialization) and inlines the pjit body; the plan itself
+    comes from/through the content-addressed plan cache.
+    """
+    from repro.core.planner import plan_graph
+    from repro.trace.jaxpr_liveness import trace_graph
+
+    graph = trace_graph(jitted, *specs, name=name)
+    plan = plan_graph(graph, mode="offsets", strategy="auto")
+    return {
+        "planner_total_gb": plan.total_size / 1e9,
+        "planner_lb_gb": plan.lower_bound / 1e9,
+        "planner_naive_gb": plan.naive_size / 1e9,
+        "planner_strategy": plan.strategy,
+        "planner_records": len(plan.records),
+        "plan_cache_hit": plan.cache_hit,
+        "plan_wall_s": plan.plan_wall_s,
+    }
+
+
 def run_one(arch: str, shape_name: str, multi_pod: bool = False,
-            seq_parallel: bool = False) -> dict:
+            seq_parallel: bool = False, activation_plan: bool = False) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "2x16x16" if multi_pod else "16x16"
     t0 = time.perf_counter()
@@ -130,7 +160,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
         lowered = jitted.lower(*specs)
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = xla_cost_analysis(compiled)
     hlo = compiled.as_text()
     # NOTE: XLA's cost_analysis() counts while bodies once (ignores trip
     # count) — see launch/hlo_analysis.py; we use our trip-aware analyzer
@@ -168,6 +198,15 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
         "xla_flops_per_dev": float(cost.get("flops", 0.0)),
         "xla_bytes_per_dev": float(cost.get("bytes accessed", 0.0)),
     }
+    if not cost:
+        # xla_cost_analysis degraded to {}: flag it in the artifact so the
+        # zeroed xla_* reference columns are not mistaken for real values
+        out["xla_cost_unavailable"] = True
+    if activation_plan:
+        try:
+            out.update(planner_report(jitted, specs, f"{arch}-{shape_name}"))
+        except Exception as e:  # planner failure must not sink the dry-run
+            out["planner_error"] = f"{type(e).__name__}: {e}"
     return out
 
 
@@ -177,6 +216,8 @@ def main() -> None:
     ap.add_argument("--shape", choices=list(INPUT_SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--activation-plan", action="store_true",
+                    help="run the paper's planner on each step's jaxpr")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
@@ -195,7 +236,8 @@ def main() -> None:
     results = []
     for arch, shape, mp in combos:
         try:
-            res = run_one(arch, shape, mp, seq_parallel=args.seq_parallel)
+            res = run_one(arch, shape, mp, seq_parallel=args.seq_parallel,
+                          activation_plan=args.activation_plan)
         except Exception as e:  # a dry-run failure is a bug in our system
             res = {
                 "arch": arch, "shape": shape,

@@ -449,3 +449,22 @@ def analyze(text: str) -> HloCost:
         return out
 
     return comp_cost(entry)
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions: older
+    releases return a one-element list of dicts (per device), newer ones a
+    plain dict; some backends return None or raise. Always returns a dict
+    (empty when unavailable)."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:
+        # degrade, but not silently: a zeroed xla_* column with no signal
+        # would corrupt roofline comparisons undetected
+        import warnings
+
+        warnings.warn(f"cost_analysis unavailable: {type(e).__name__}: {e}")
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}

@@ -53,9 +53,14 @@ class MemoryReport:
     xla_temp_bytes: int | None
     cache_bytes_per_slot: int
     n_slots: int
+    # the activation plan came from the content-addressed plan cache
+    # (repeat engine construction over an unchanged decode graph)
+    plan_cache_hit: bool = False
 
     def summary(self) -> str:
         lines = [self.activation_plan.summary()]
+        if self.plan_cache_hit:
+            lines.append("activation plan served from the plan cache")
         if self.xla_temp_bytes is not None:
             lines.append(
                 f"XLA temp allocation for the same step: "
@@ -126,6 +131,7 @@ class InferenceEngine:
             xla_temp_bytes=xla_temp,
             cache_bytes_per_slot=int(cache_bytes // n_slots),
             n_slots=n_slots,
+            plan_cache_hit=plan.cache_hit,
         )
 
         # serving state — per-slot positions (continuous batching: every

@@ -1,0 +1,154 @@
+"""Random usage-record generators for the differential-test harness.
+
+Plain-``random`` generator functions (no hypothesis dependency — the
+differential oracle harness must run everywhere the repo runs); when
+hypothesis IS installed, :func:`hypothesis_records` wraps the same
+generators as a strategy so shrinking works on property tests too.
+
+Four synthetic families stress different planner regimes, and
+:func:`config_records` traces every REDUCED model config in
+``src/repro/configs/`` to real transformer/SSM/MoE decode-stack graphs:
+
+* ``uniform``  — i.i.d. intervals and sizes (the classic fuzz case)
+* ``chain``    — producer->consumer pipelines with skip connections
+               (DNN-like: short intervals + a few long skips)
+* ``layered``  — transformer-shaped: per-layer short-lived activations
+               plus residual-stream tensors spanning whole layers
+* ``ties``     — few distinct (aligned) sizes and heavy interval sharing:
+               adversarial for tie-breaking equivalence, where a fast
+               reimplementation is most likely to drift from the oracle
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+from typing import Callable
+
+from repro.core.records import TensorUsageRecord
+
+
+def uniform_records(
+    seed: int, n: int | None = None, max_ops: int = 24, max_size: int = 512
+) -> list[TensorUsageRecord]:
+    rng = random.Random(seed)
+    n = n or rng.randrange(1, 48)
+    recs = []
+    for i in range(n):
+        a = rng.randrange(max_ops)
+        b = rng.randrange(a, max_ops)
+        recs.append(
+            TensorUsageRecord(a, b, rng.randrange(1, max_size), tensor_id=i)
+        )
+    return recs
+
+
+def chain_records(seed: int, n: int | None = None) -> list[TensorUsageRecord]:
+    rng = random.Random(seed)
+    n = n or rng.randrange(2, 40)
+    recs = []
+    for i in range(n):
+        first = i
+        # mostly consumed by the next op; occasionally a long skip edge
+        last = i + (rng.randrange(2, 12) if rng.random() < 0.2 else 1)
+        recs.append(
+            TensorUsageRecord(
+                first, min(last, n + 11), rng.choice([64, 128, 256, 384]),
+                tensor_id=i,
+            )
+        )
+    return recs
+
+
+def layered_records(seed: int, n_layers: int | None = None) -> list[TensorUsageRecord]:
+    rng = random.Random(seed)
+    n_layers = n_layers or rng.randrange(1, 8)
+    ops_per_layer = 5
+    recs = []
+    tid = 0
+    for layer in range(n_layers):
+        base = layer * ops_per_layer
+        # residual stream: lives across the whole layer
+        recs.append(
+            TensorUsageRecord(base, base + ops_per_layer, 256, tensor_id=tid)
+        )
+        tid += 1
+        # short-lived per-layer activations (qkv, mlp hidden, etc.)
+        for j in range(rng.randrange(2, 6)):
+            a = base + rng.randrange(ops_per_layer)
+            b = min(a + rng.randrange(1, 3), base + ops_per_layer)
+            recs.append(
+                TensorUsageRecord(
+                    a, b, rng.choice([128, 512, 1024]), tensor_id=tid
+                )
+            )
+            tid += 1
+    return recs
+
+
+def ties_records(seed: int, n: int | None = None) -> list[TensorUsageRecord]:
+    rng = random.Random(seed)
+    n = n or rng.randrange(4, 56)
+    sizes = [64, 64, 64, 128, 128, 256]  # heavy duplication on purpose
+    max_ops = max(4, n // 3)
+    recs = []
+    for i in range(n):
+        a = rng.randrange(max_ops)
+        b = rng.randrange(a, max_ops)
+        recs.append(TensorUsageRecord(a, b, rng.choice(sizes), tensor_id=i))
+    return recs
+
+
+GENERATORS: dict[str, Callable[[int], list[TensorUsageRecord]]] = {
+    "uniform": uniform_records,
+    "chain": chain_records,
+    "layered": layered_records,
+    "ties": ties_records,
+}
+
+
+def generate(kind: str, seed: int) -> list[TensorUsageRecord]:
+    return GENERATORS[kind](seed)
+
+
+@functools.lru_cache(maxsize=None)
+def config_records(arch: str) -> tuple[TensorUsageRecord, ...]:
+    """Usage records of the REDUCED config's forward graph (shape-level
+    trace; no parameters are materialized). Cached per session — several
+    test modules sweep the same ten graphs."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_reduced
+    from repro.models.api import Model
+    from repro.trace.jaxpr_liveness import trace_graph
+
+    cfg = get_reduced(arch)
+    model = Model.for_config(cfg)
+    B, S = 2, 16
+    sds = jax.ShapeDtypeStruct
+    batch: dict = {"tokens": sds((B, S), jnp.int32)}
+    if cfg.n_prefix_tokens:
+        batch["prefix_embeds"] = sds(
+            (B, cfg.n_prefix_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    if cfg.family == "audio":
+        batch["frames"] = sds(
+            (B, max(S // cfg.enc_len_ratio, 1), cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    graph = trace_graph(
+        lambda p, b: model.forward(p, b), params, batch, name=f"{arch}-fwd"
+    )
+    return tuple(graph.usage_records())
+
+
+def hypothesis_records():
+    """Optional hypothesis strategy over all generator families."""
+    from hypothesis import strategies as st
+
+    return st.builds(
+        generate,
+        st.sampled_from(sorted(GENERATORS)),
+        st.integers(min_value=0, max_value=1 << 20),
+    )

@@ -1,0 +1,82 @@
+"""Overlap safety at scale: every model config × every registered strategy.
+
+Sweeps each REDUCED config in ``src/repro/configs/`` through
+``trace_graph`` → ``plan_graph``/``plan_records`` and asserts, via the
+independent checker in ``repro.core.validate``, that no two
+simultaneously-live tensors ever share bytes — for every strategy name
+registered in the planner, both modes.
+"""
+
+import pytest
+
+from graph_gen import config_records
+from repro.configs.base import ARCH_IDS
+from repro.core.planner import (
+    OFFSET_STRATEGIES,
+    SHARED_OBJECT_STRATEGIES,
+    plan_records,
+)
+from repro.core.records import TensorUsageRecord
+from repro.core.validate import check_offsets, check_shared_objects
+
+# min_cost_flow is O(n³)-ish (successive shortest paths over a dense
+# bipartite graph) — sound but impractical on multi-hundred-record
+# graphs; it stays covered by the small-instance property/unit tests.
+SO_SWEEP = sorted(set(SHARED_OBJECT_STRATEGIES) - {"min_cost_flow"})
+OFF_SWEEP = sorted(OFFSET_STRATEGIES)
+
+
+def _offsets_view(plan):
+    """Re-wrap a MemoryPlan for the independent offset checker."""
+    from repro.core.offsets import OffsetAssignment
+
+    return OffsetAssignment(plan.strategy, plan.offsets, plan.total_size)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("strategy", OFF_SWEEP)
+def test_offsets_strategies_overlap_free(arch, strategy):
+    recs = list(config_records(arch))
+    plan = plan_records(
+        recs, mode="offsets", strategy=strategy, graph_name=arch,
+        use_cache=False,
+    )
+    check_offsets(recs, _offsets_view(plan))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("strategy", SO_SWEEP)
+def test_shared_object_strategies_overlap_free(arch, strategy):
+    recs = list(config_records(arch))
+    plan = plan_records(
+        recs, mode="shared_objects", strategy=strategy, graph_name=arch,
+        use_cache=False,
+    )
+    assert plan.shared_objects is not None
+    check_shared_objects(recs, plan.shared_objects)
+    # the contiguous-objects conversion must be overlap-free too
+    check_offsets(recs, _offsets_view(plan))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_auto_plan_cached_across_engine_constructions(arch):
+    """The serving-path pattern: repeat plan_records on an unchanged graph
+    must come from the cache (near-free auto-strategy sweeps)."""
+    from repro.core.plan_io import PlanCache
+
+    recs = list(config_records(arch))
+    cache = PlanCache()
+    first = plan_records(recs, strategy="auto", cache=cache)
+    second = plan_records(recs, strategy="auto", cache=cache)
+    assert not first.cache_hit and second.cache_hit
+    assert second.total_size == first.total_size
+    assert second.offsets == first.offsets
+
+
+def test_records_are_wellformed_for_all_configs():
+    for arch in ARCH_IDS:
+        recs = config_records(arch)
+        assert recs, arch
+        for r in recs:
+            assert isinstance(r, TensorUsageRecord)
+            assert r.size % 64 == 0, "sizes must be alignment-rounded"

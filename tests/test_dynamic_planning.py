@@ -1,5 +1,8 @@
 """Paper §7 dynamic-shape protocol: staged planning with fixed history."""
 
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dynamic import IncrementalPlanner

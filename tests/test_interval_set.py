@@ -1,0 +1,112 @@
+"""Direct unit fuzz of the shared overlap engine (core/interval_set).
+
+The differential harness covers the engine end-to-end through the
+strategies; this pins the primitives against brute force so a future
+engine bug localizes to one structure instead of a planner diff.
+"""
+
+import random
+
+import pytest
+
+from repro.core.interval_set import (
+    BestFitArena,
+    DisjointIntervalSet,
+    IntervalTree,
+)
+from repro.core.records import TensorUsageRecord
+
+_INF = 1 << 60
+
+
+def _overlap(a, b, f, l):
+    return max(a, f) <= min(b, l)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_disjoint_interval_set_matches_bruteforce(seed):
+    rng = random.Random(seed)
+    stored: list[tuple[int, int]] = []
+    s = DisjointIntervalSet()
+    for _ in range(200):
+        f = rng.randrange(200)
+        l = f + rng.randrange(8)
+        brute_hit = any(_overlap(a, b, f, l) for a, b in stored)
+        assert s.overlaps(f, l) == brute_hit
+        if not brute_hit:
+            # gap query is only defined for non-overlapping probes
+            before = [f - b - 1 for a, b in stored if b < f]
+            after = [a - l - 1 for a, b in stored if a > l]
+            brute_gap = min(before + after, default=_INF)
+            assert s.smallest_gap(f, l) == brute_gap
+            if rng.random() < 0.5:
+                s.add(f, l)
+                stored.append((f, l))
+    assert len(s) == len(stored)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_interval_tree_matches_bruteforce(seed):
+    rng = random.Random(seed)
+    tree = IntervalTree()
+    stored: list[tuple[int, int, int]] = []
+    for i in range(300):
+        if rng.random() < 0.7:
+            a = rng.randrange(120)
+            b = a + rng.randrange(20)
+            tree.insert(a, b, i)
+            stored.append((a, b, i))
+        f = rng.randrange(120)
+        l = f + rng.randrange(20)
+        got = sorted(tree.overlapping(f, l))
+        want = sorted(i for a, b, i in stored if _overlap(a, b, f, l))
+        assert got == want
+    assert len(tree) == len(stored)
+
+
+def test_interval_tree_deterministic_shape():
+    """Same insertion sequence -> same enumeration order (priorities are a
+    deterministic stream; plans must not vary across runs)."""
+    def build():
+        t = IntervalTree()
+        for i in range(50):
+            t.insert((i * 7) % 23, (i * 7) % 23 + 3, i)
+        return t.overlapping(0, 30)
+
+    assert build() == build()
+
+
+@pytest.mark.parametrize("first_fit", [False, True])
+@pytest.mark.parametrize("seed", range(10))
+def test_best_fit_arena_never_overlaps(seed, first_fit):
+    rng = random.Random(seed)
+    arena = BestFitArena(first_fit=first_fit)
+    recs = []
+    for i in range(120):
+        a = rng.randrange(40)
+        b = a + rng.randrange(6)
+        recs.append(TensorUsageRecord(a, b, rng.randrange(1, 100), tensor_id=i))
+        arena.place(recs[-1])
+    for i, x in enumerate(recs):
+        xo = arena.offsets[x.tensor_id]
+        assert xo >= 0 and xo + x.size <= arena.total
+        for y in recs[i + 1:]:
+            if x.overlaps(y):
+                yo = arena.offsets[y.tensor_id]
+                assert xo + x.size <= yo or yo + y.size <= xo
+
+
+def test_best_fit_arena_fills_gaps():
+    # two pinned records leave a [100, 200) hole at ops 0-1; a 100-byte
+    # record must land exactly in it
+    arena = BestFitArena()
+    lo = TensorUsageRecord(0, 3, 100, tensor_id=0)
+    hi = TensorUsageRecord(0, 3, 50, tensor_id=1)
+    arena.place_at(lo, 0)
+    arena.place_at(hi, 200)
+    fit = TensorUsageRecord(0, 1, 100, tensor_id=2)
+    assert arena.place(fit) == 100
+    assert arena.total == 250
+    # a record too big for the hole appends at the end
+    big = TensorUsageRecord(1, 2, 128, tensor_id=3)
+    assert arena.place(big) == 250

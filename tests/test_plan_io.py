@@ -1,0 +1,205 @@
+"""Plan serialization + content-addressed plan cache (core/plan_io)."""
+
+import dataclasses
+
+import pytest
+
+from repro.core import plan_io
+from repro.core.graph import graph_from_records
+from repro.core.planner import plan_graph, plan_records
+from repro.core.records import TensorUsageRecord, make_records
+
+RECS = [
+    (0, 1, 64), (1, 3, 128), (2, 4, 64), (4, 5, 256), (0, 5, 32), (3, 3, 512),
+]
+
+
+def _plans_equal(a, b) -> bool:
+    if (a.graph_name, a.strategy, a.records, a.offsets, a.total_size,
+            a.lower_bound, a.naive_size) != \
+       (b.graph_name, b.strategy, b.records, b.offsets, b.total_size,
+            b.lower_bound, b.naive_size):
+        return False
+    if (a.shared_objects is None) != (b.shared_objects is None):
+        return False
+    if a.shared_objects is not None:
+        sa, sb = a.shared_objects, b.shared_objects
+        if sa.assignment != sb.assignment or sa.strategy != sb.strategy:
+            return False
+        if [(o.object_id, o.size, o.intervals) for o in sa.objects] != \
+           [(o.object_id, o.size, o.intervals) for o in sb.objects]:
+            return False
+    return True
+
+
+# ----------------------------------------------------------- round-trips
+
+
+@pytest.mark.parametrize("mode,strategy", [
+    ("offsets", "auto"),
+    ("offsets", "greedy_by_size"),
+    ("shared_objects", "greedy_by_size_improved"),
+])
+def test_json_roundtrip(mode, strategy):
+    plan = plan_records(
+        make_records(RECS), mode=mode, strategy=strategy, use_cache=False
+    )
+    text = plan_io.plan_to_json(plan)
+    back = plan_io.plan_from_json(text)
+    assert _plans_equal(plan, back)
+    # canonical: serializing the deserialized plan is byte-identical
+    assert plan_io.plan_to_json(back) == text
+
+
+def test_save_load_file(tmp_path):
+    plan = plan_records(make_records(RECS), use_cache=False)
+    path = tmp_path / "plan.json"
+    plan_io.save_plan(plan, path)
+    assert _plans_equal(plan_io.load_plan(path), plan)
+
+
+def test_unknown_format_version_rejected():
+    plan = plan_records(make_records(RECS), use_cache=False)
+    obj = plan_io.plan_to_obj(plan)
+    obj["format_version"] = plan_io.PLAN_FORMAT_VERSION + 1
+    with pytest.raises(ValueError, match="format version"):
+        plan_io.plan_from_obj(obj)
+
+
+# ------------------------------------------------------------- signatures
+
+
+def test_signature_ignores_record_order_and_graph_name():
+    recs = make_records(RECS)
+    shuffled = list(reversed(recs))
+    k1 = plan_io.plan_signature(recs, mode="offsets", strategy="auto")
+    k2 = plan_io.plan_signature(shuffled, mode="offsets", strategy="auto")
+    assert k1 == k2
+
+
+def test_signature_sensitive_to_inputs():
+    recs = make_records(RECS)
+    base = plan_io.plan_signature(recs, mode="offsets", strategy="auto")
+    assert plan_io.plan_signature(recs, mode="offsets", strategy="greedy_by_size") != base
+    assert plan_io.plan_signature(recs, mode="shared_objects", strategy="auto") != base
+    grown = recs[:-1] + [dataclasses.replace(recs[-1], size=recs[-1].size + 64)]
+    assert plan_io.plan_signature(grown, mode="offsets", strategy="auto") != base
+
+
+# ------------------------------------------------------------------ cache
+
+
+def test_cache_hit_returns_equivalent_plan():
+    cache = plan_io.PlanCache()
+    recs = make_records(RECS)
+    p1 = plan_records(recs, strategy="auto", cache=cache)
+    p2 = plan_records(recs, strategy="auto", cache=cache, graph_name="renamed")
+    assert not p1.cache_hit
+    assert p2.cache_hit
+    assert p2.graph_name == "renamed"
+    assert p2.offsets == p1.offsets and p2.total_size == p1.total_size
+    assert cache.stats["hits"] == 1 and cache.stats["misses"] == 1
+
+
+def test_cache_miss_on_strategy_change():
+    cache = plan_io.PlanCache()
+    recs = make_records(RECS)
+    plan_records(recs, strategy="greedy_by_size", cache=cache)
+    p = plan_records(recs, strategy="greedy_by_breadth", cache=cache)
+    assert not p.cache_hit
+    assert cache.stats["misses"] == 2
+
+
+def test_cache_invalidated_by_alignment_change():
+    graph = graph_from_records(make_records(RECS), name="g")
+    cache = plan_io.PlanCache()
+    p64 = plan_graph(graph, alignment=64, cache=cache)
+    p1 = plan_graph(graph, alignment=1, cache=cache)
+    assert not p1.cache_hit, "different alignment must not share a cache entry"
+    again = plan_graph(graph, alignment=64, cache=cache)
+    assert again.cache_hit and again.total_size == p64.total_size
+
+
+def test_cache_result_is_isolated_from_caller_mutation():
+    cache = plan_io.PlanCache()
+    recs = make_records(RECS)
+    p1 = plan_records(recs, cache=cache)
+    p1.offsets[recs[0].tensor_id] = 10**9  # caller scribbles on its copy
+    p2 = plan_records(recs, cache=cache)
+    assert p2.offsets[recs[0].tensor_id] != 10**9
+
+
+def test_disk_cache_persists_across_instances(tmp_path):
+    recs = make_records(RECS)
+    c1 = plan_io.PlanCache(tmp_path)
+    p1 = plan_records(recs, cache=c1)
+    assert not p1.cache_hit
+    c2 = plan_io.PlanCache(tmp_path)  # fresh process, same directory
+    p2 = plan_records(recs, cache=c2)
+    assert p2.cache_hit
+    assert _plans_equal(
+        dataclasses.replace(p2, cache_hit=False, plan_wall_s=p1.plan_wall_s), p1
+    )
+
+
+def test_disk_cache_write_failure_is_nonfatal(tmp_path):
+    """A broken cache dir must not fail the planning call (best-effort
+    tier). A path under a regular file fails mkdir even when running as
+    root (permission bits would not)."""
+    blocker = tmp_path / "blocker"
+    blocker.write_text("")
+    cache = plan_io.PlanCache(blocker / "sub")
+    p = plan_records(make_records(RECS), cache=cache)
+    assert not p.cache_hit and p.total_size > 0
+    # memory tier still works despite the dead disk tier
+    assert plan_records(make_records(RECS), cache=cache).cache_hit
+
+
+def test_disk_cache_ignores_corrupt_entry(tmp_path):
+    recs = make_records(RECS)
+    cache = plan_io.PlanCache(tmp_path)
+    key = plan_io.plan_signature(recs, mode="offsets", strategy="auto")
+    (tmp_path / f"{key}.json").write_text("{not json")
+    p = plan_records(recs, cache=cache)
+    assert not p.cache_hit  # corrupt entry treated as a miss, then rewritten
+    assert plan_records(recs, cache=plan_io.PlanCache(tmp_path)).cache_hit
+
+
+def test_signature_includes_planner_revision(monkeypatch):
+    recs = make_records(RECS)
+    base = plan_io.plan_signature(recs, mode="offsets", strategy="auto")
+    monkeypatch.setattr(plan_io, "PLANNER_REVISION", plan_io.PLANNER_REVISION + 1)
+    assert plan_io.plan_signature(recs, mode="offsets", strategy="auto") != base
+
+
+def test_auto_key_spells_out_portfolio():
+    from repro.core.planner import _cache_strategy_key
+
+    assert _cache_strategy_key("offsets", "greedy_by_size") == "greedy_by_size"
+    auto = _cache_strategy_key("offsets", "auto")
+    assert auto.startswith("auto[") and "strip_packing_bestfit" in auto
+    assert _cache_strategy_key("shared_objects", "auto") != auto
+
+
+def test_default_cache_env_var_read_late(tmp_path, monkeypatch):
+    """REPRO_PLAN_CACHE_DIR set after import must still enable the disk
+    tier (the env is re-read per call, not frozen at import time)."""
+    from repro.core.planner import _cache_strategy_key
+
+    monkeypatch.setenv("REPRO_PLAN_CACHE_DIR", str(tmp_path))
+    recs = [TensorUsageRecord(2, 9, 192, tensor_id=3)]
+    plan_records(recs)
+    key = plan_io.plan_signature(
+        recs, mode="offsets", strategy=_cache_strategy_key("offsets", "auto")
+    )
+    assert (tmp_path / f"{key}.json").exists()
+
+
+def test_default_cache_used_by_plan_records():
+    recs = [TensorUsageRecord(0, 3, 4096, tensor_id=7),
+            TensorUsageRecord(1, 2, 8192, tensor_id=11)]
+    before = plan_io.default_cache().stats["hits"]
+    plan_records(recs)
+    p = plan_records(recs)
+    assert p.cache_hit
+    assert plan_io.default_cache().stats["hits"] > before

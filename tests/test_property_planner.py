@@ -8,6 +8,9 @@ Invariants (for EVERY strategy, paper's and baselines'):
     instances within the known-greedy gap (and never beat it)
 """
 
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import baselines, extensions, offsets, optimal, shared_objects
