@@ -1,8 +1,10 @@
 """Beyond-paper experiments:
 
-1. **Topological-order search** (the paper's §7.1 future work): how much
-   does re-ordering the op schedule shrink the offsets footprint on the
-   paper's six networks?
+1. **Order/fusion search** (the paper's §7.1 future work + MAFAT-style
+   fusion): how much do re-ordering the op schedule and fusing adjacent
+   op groups shrink the PLANNED footprint on the paper's six networks?
+   Every candidate is costed by the real planner through the plan cache
+   (see also benchmarks/order_search_bench.py for the tracked artifact).
 2. **Exact optimality gap**: branch-and-bound optima on random small
    instances vs each greedy strategy (the paper only reports distance to
    its lower *bounds*, which may be unachievable).
@@ -14,8 +16,10 @@ import random
 import time
 
 from repro.core import offsets, optimal, shared_objects
-from repro.core.order_search import memory_aware_topo_order, simulated_annealing_order
-from repro.core.records import TensorUsageRecord, offsets_lower_bound
+from repro.core.fusion_search import fusion_search
+from repro.core.order_search import search_order
+from repro.core.plan_io import PlanCache
+from repro.core.records import TensorUsageRecord
 from repro.models.convnets import PAPER_NETWORKS
 
 MB = 2**20
@@ -23,22 +27,23 @@ MB = 2**20
 
 def order_search(emit=print) -> None:
     emit("name,us_per_call,derived")
+    cache = PlanCache()
     for net, fn in PAPER_NETWORKS.items():
         g = fn()
-        base = offsets.greedy_by_size_offsets(g.usage_records()).total_size
         t0 = time.perf_counter()
-        g2 = memory_aware_topo_order(g)
-        greedy_total = offsets.greedy_by_size_offsets(g2.usage_records()).total_size
+        order_res = search_order(g, iters=600, seed=0, cache=cache)
         t1 = time.perf_counter()
-        g3 = simulated_annealing_order(g, iters=600, seed=0)
-        sa_total = offsets.greedy_by_size_offsets(g3.usage_records()).total_size
+        fusion_res = fusion_search(g, cache=cache)
         t2 = time.perf_counter()
+        base = order_res.baseline_plan.total_size
+        best = min(order_res.plan.total_size, fusion_res.plan.total_size)
         emit(
             f"order_search_{net},{(t2 - t0) * 1e6:.0f},"
-            f"fixed={base / MB:.3f}MiB memaware={greedy_total / MB:.3f} "
-            f"({(t1 - t0) * 1e3:.0f}ms) anneal={sa_total / MB:.3f} "
+            f"fixed={base / MB:.3f}MiB order={order_res.plan.total_size / MB:.3f} "
+            f"({(t1 - t0) * 1e3:.0f}ms) fused={fusion_res.plan.total_size / MB:.3f} "
             f"({(t2 - t1) * 1e3:.0f}ms) "
-            f"best_delta={(base - min(greedy_total, sa_total)) / MB:+.3f}"
+            f"best_delta={(base - best) / MB:+.3f} "
+            f"hit_rate={(order_res.cache_hit_rate + fusion_res.cache_hit_rate) / 2:.2f}"
         )
 
 

@@ -1,0 +1,181 @@
+"""Memory-aware order/fusion search over the paper's six networks.
+
+For every model config this benchmark plans the default order (the
+paper's setting), then runs the two outer searches built on the cached
+planner — topological-order annealing (``core/order_search``) and
+MAFAT-style fusion search (``core/fusion_search``) — and reports the
+planned-footprint delta and the plan-cache hit rate per config. A second
+sweep over the same configs with the shared cache shows the outer-loop
+regime the cache was built for (every evaluation a hit).
+
+It also micro-benchmarks the incremental usage-record updater against the
+legacy per-candidate rebuild (reorder + ``Graph.validate()`` +
+``usage_records()``), the loop the old search paid on every iteration.
+
+Hard checks (the PR's acceptance criteria, enforced here so regressions
+fail CI):
+* searched footprint <= default-order footprint on EVERY config;
+* strictly smaller on >= 3 configs.
+
+Usage:
+    PYTHONPATH=src python benchmarks/order_search_bench.py --quick \
+        --out BENCH_search.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import time
+
+from repro.core.fusion_search import fusion_search
+from repro.core.graph import Graph
+from repro.core.order_search import IncrementalRecords, search_order
+from repro.core.plan_io import PlanCache
+from repro.models.convnets import PAPER_NETWORKS
+
+MB = 2**20
+
+
+def sweep(iters: int, *, cache: PlanCache, emit=print) -> list[dict]:
+    rows = []
+    for name, fn in PAPER_NETWORKS.items():
+        g = fn()
+        order_res = search_order(g, iters=iters, seed=0, cache=cache)
+        fusion_res = fusion_search(g, cache=cache)
+        baseline = order_res.baseline_plan.total_size
+        best = min(order_res.plan.total_size, fusion_res.plan.total_size)
+        row = {
+            "config": name,
+            "ops": len(g.ops),
+            "records": len(order_res.baseline_plan.records),
+            "baseline_bytes": baseline,
+            "searched_order_bytes": order_res.plan.total_size,
+            "fused_bytes": fusion_res.plan.total_size,
+            "best_bytes": best,
+            "delta_bytes": baseline - best,
+            "fused_groups": fusion_res.n_fused_groups,
+            "internalized_bytes": fusion_res.internalized_bytes,
+            "evaluations": order_res.evaluations + fusion_res.evaluations,
+            "order_cache_hit_rate": round(order_res.cache_hit_rate, 4),
+            "fusion_cache_hit_rate": round(fusion_res.cache_hit_rate, 4),
+            "wall_s": round(order_res.wall_s + fusion_res.wall_s, 4),
+        }
+        rows.append(row)
+        emit(
+            f"{name}: baseline {baseline / MB:.3f} MiB -> best "
+            f"{best / MB:.3f} MiB (delta {row['delta_bytes'] / MB:+.3f}, "
+            f"{row['fused_groups']} fused groups, "
+            f"{row['evaluations']} plan calls, {row['wall_s']:.2f}s)"
+        )
+    return rows
+
+
+def resweep_hit_rate(iters: int, cache: PlanCache) -> float:
+    """Re-run the searches against the warm shared cache — the outer-sweep
+    regime (config sweeps, repeated engine construction) where every plan
+    call should be a hit."""
+    h0, m0 = cache.hits, cache.misses
+    for name, fn in PAPER_NETWORKS.items():
+        g = fn()
+        search_order(g, iters=iters, seed=0, cache=cache)
+        fusion_search(g, cache=cache)
+    hits, misses = cache.hits - h0, cache.misses - m0
+    return hits / max(hits + misses, 1)
+
+
+def micro_incremental_vs_rebuild(
+    n_swaps: int = 300, emit=print
+) -> dict:
+    """Per-candidate cost of deriving records after an adjacent swap:
+    incremental updater vs the legacy rebuild the old annealing loop ran
+    (reorder the op list, re-validate the whole graph, re-extract every
+    record)."""
+    g = PAPER_NETWORKS["inception_v3"]()
+    probe = IncrementalRecords(g)
+    rng = random.Random(0)
+    n = len(g.ops)
+    ks: list[int] = []
+    while len(ks) < n_swaps:
+        k = rng.randrange(n - 1)
+        if probe.can_swap(k):
+            probe.swap(k)
+            ks.append(k)
+
+    inc = IncrementalRecords(g)
+    t0 = time.perf_counter()
+    for k in ks:
+        inc.swap(k)
+        inc.records()
+    t_inc = time.perf_counter() - t0
+
+    order = list(range(n))
+    t0 = time.perf_counter()
+    for k in ks:
+        order[k], order[k + 1] = order[k + 1], order[k]
+        g2 = Graph(
+            name=g.name,
+            ops=[g.ops[i] for i in order],
+            tensors=g.tensors,
+            boundary_ids=g.boundary_ids,
+        )
+        g2.validate()
+        g2.usage_records()
+    t_full = time.perf_counter() - t0
+
+    assert sorted(inc.records()) == sorted(g2.usage_records()), (
+        "incremental records diverged from the full rebuild"
+    )
+    out = {
+        "graph": g.name,
+        "n_swaps": n_swaps,
+        "incremental_us_per_swap": round(t_inc / n_swaps * 1e6, 2),
+        "rebuild_us_per_swap": round(t_full / n_swaps * 1e6, 2),
+        "speedup": round(t_full / max(t_inc, 1e-9), 2),
+    }
+    emit(
+        f"incremental updater: {out['incremental_us_per_swap']} us/swap vs "
+        f"rebuild {out['rebuild_us_per_swap']} us/swap "
+        f"({out['speedup']}x)"
+    )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI sweep: fewer annealing iterations")
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--out", default=None, help="write JSON results here")
+    args = ap.parse_args()
+    iters = args.iters or (250 if args.quick else 1000)
+
+    cache = PlanCache()
+    rows = sweep(iters, cache=cache)
+    warm = resweep_hit_rate(iters, cache)
+    print(f"warm resweep plan-cache hit rate: {warm:.3f}")
+    micro = micro_incremental_vs_rebuild()
+
+    worse = [r["config"] for r in rows if r["best_bytes"] > r["baseline_bytes"]]
+    assert not worse, f"search regressed the footprint on: {worse}"
+    strict = sum(r["delta_bytes"] > 0 for r in rows)
+    assert strict >= 3, f"only {strict} configs strictly improved (need >= 3)"
+    print(f"# {strict}/{len(rows)} configs strictly improved, none regressed")
+
+    result = {
+        "bench": "order_fusion_search",
+        "iters": iters,
+        "rows": rows,
+        "warm_resweep_hit_rate": round(warm, 4),
+        "strict_improvements": strict,
+        "micro_incremental_vs_rebuild": micro,
+    }
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

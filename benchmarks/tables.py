@@ -10,6 +10,9 @@ from __future__ import annotations
 import time
 
 from repro.core import baselines, offsets, shared_objects
+from repro.core.fusion_search import fusion_search
+from repro.core.order_search import search_order
+from repro.core.plan_io import PlanCache
 from repro.core.records import (
     naive_consumption,
     offsets_lower_bound,
@@ -66,6 +69,7 @@ def table2_offsets(emit=print) -> dict:
         "strip_packing (Sekiyama'18)": baselines.strip_packing_bestfit,
     }
     out: dict = {}
+    search_cache = PlanCache()
     emit("table,network,strategy,ours_mb,paper_mb,us_per_call")
     for net, rs in recs.items():
         for sname, fn in strategies.items():
@@ -76,6 +80,22 @@ def table2_offsets(emit=print) -> dict:
             paper = PAPER_TABLE2.get(key, {}).get(net, "")
             emit(f"table2,{net},{sname},{total:.3f},{paper},{dt:.0f}")
             out.setdefault(net, {})[sname] = total
+        # beyond the paper (§7.1): memory-aware order + fusion search over
+        # the graph, every candidate planned through the plan cache; the
+        # paper has no such column, so paper_mb is blank
+        g = PAPER_NETWORKS[net]()
+        t0 = time.perf_counter()
+        order_res = search_order(g, iters=300, seed=0, cache=search_cache)
+        fusion_res = fusion_search(g, cache=search_cache)
+        searched = min(
+            order_res.plan.total_size, fusion_res.plan.total_size
+        ) / MB
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(f"table2,{net},searched_order (ours),{searched:.3f},,{dt:.0f}")
+        out[net]["searched_order"] = searched
+        # the search's own fixed-order baseline (auto portfolio) — the
+        # honest comparator for "did the SEARCH shrink the plan"
+        out[net]["fixed_order_auto"] = order_res.baseline_plan.total_size / MB
         lb = offsets_lower_bound(rs) / MB
         nv = naive_consumption(rs) / MB
         emit(f"table2,{net},lower_bound,{lb:.3f},{PAPER_TABLE2['lower_bound'][net]},0")
@@ -114,4 +134,14 @@ def validate_paper_claims(t1: dict, t2: dict, emit=print) -> list[str]:
     # our strategies never lose to the naive baseline
     for net in t1:
         check(t1[net]["greedy_by_size_improved"] <= t1[net]["naive"], f"t1 {net} <= naive")
+    # beyond paper: the planner-driven order/fusion search never loses to
+    # the fixed-order plan, and strictly shrinks the arena on most nets.
+    # Strictness is judged against the search's OWN fixed-order auto
+    # baseline, not GBS — strategy choice alone must not count as a win.
+    strict = 0
+    for net in t2:
+        srch, base = t2[net]["searched_order"], t2[net]["fixed_order_auto"]
+        check(srch <= base + 1e-9, f"t2 {net}: searched <= fixed-order plan")
+        strict += srch < base - 1e-9
+    check(strict >= 3, f"searched order/fusion strictly improves {strict}/6 nets (need >= 3)")
     return failures

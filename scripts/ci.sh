@@ -16,4 +16,8 @@ python -m pytest -q
 
 if [[ -z "${SKIP_BENCH:-}" ]]; then
     python benchmarks/planner_scaling.py --quick --out BENCH_planner.json
+    # order/fusion search smoke: asserts footprint <= baseline on every
+    # config and strictly smaller on >= 3 (BENCH_search.json is the
+    # committed trajectory)
+    python benchmarks/order_search_bench.py --quick --out BENCH_search.json
 fi

@@ -13,7 +13,10 @@ Public API:
     plan_io      — versioned plan JSON + content-addressed plan cache
     reference    — FROZEN seed implementations (the differential oracle)
     optimal      — exact branch-and-bound (beyond paper)
-    order_search — topological-order optimization (paper §7.1 future work)
+    order_search — topological-order search over REAL cached plans, with
+                   an incremental usage-record updater (paper §7.1)
+    fusion_search — MAFAT-style fusion search over graph partitions;
+                   keeps partitions that shrink the planned arena
 
 Oracle-vs-fast contract
     ``reference`` preserves the seed's naive O(k·n²) strategies, with
@@ -43,8 +46,20 @@ Plan-cache keying
     variable is re-read on every planning call, not frozen at import).
 """
 
+from repro.core.fusion_search import (
+    FusionSearchResult,
+    fuse_groups,
+    fusion_search,
+)
 from repro.core.graph import Graph, GraphBuilder, Op, TensorSpec
 from repro.core.interval_set import BestFitArena, DisjointIntervalSet, IntervalTree
+from repro.core.order_search import (
+    IncrementalRecords,
+    OrderSearchResult,
+    memory_aware_topo_order,
+    search_order,
+    simulated_annealing_order,
+)
 from repro.core.plan_io import (
     PLAN_FORMAT_VERSION,
     PLANNER_REVISION,
@@ -75,10 +90,18 @@ from repro.core.records import (
 )
 
 __all__ = [
+    "FusionSearchResult",
+    "fuse_groups",
+    "fusion_search",
     "Graph",
     "GraphBuilder",
     "Op",
     "TensorSpec",
+    "IncrementalRecords",
+    "OrderSearchResult",
+    "memory_aware_topo_order",
+    "search_order",
+    "simulated_annealing_order",
     "BestFitArena",
     "DisjointIntervalSet",
     "IntervalTree",

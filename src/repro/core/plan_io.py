@@ -190,17 +190,44 @@ def plan_signature(
 # ------------------------------------------------------------------ cache
 
 
+def _env_max_disk_bytes() -> int | None:
+    """Size cap for the disk tier from ``REPRO_PLAN_CACHE_MAX_BYTES``
+    (re-read per put, like the cache dir itself); unset/invalid/<=0
+    disables eviction."""
+    raw = os.environ.get("REPRO_PLAN_CACHE_MAX_BYTES")
+    if not raw:
+        return None
+    try:
+        val = int(raw)
+    except ValueError:
+        return None
+    return val if val > 0 else None
+
+
 class PlanCache:
     """signature -> MemoryPlan, memory-first with an optional disk tier.
 
     The disk tier stores one canonical-JSON file per plan, named by
     signature, so it is safe to share between processes (writes go through
-    a same-directory temp file + atomic rename).
+    a same-directory temp file + atomic rename). Under outer-search sweeps
+    it would grow without bound, so every put enforces a size cap
+    (``max_disk_bytes`` or ``REPRO_PLAN_CACHE_MAX_BYTES``) by evicting
+    oldest-mtime entries first — best-effort like the writes themselves:
+    entries deleted concurrently by another process are simply skipped.
     """
 
-    def __init__(self, cache_dir: str | Path | None = None):
+    def __init__(
+        self,
+        cache_dir: str | Path | None = None,
+        max_disk_bytes: int | None = None,
+    ):
         self._mem: dict[str, "MemoryPlan"] = {}
         self.cache_dir = Path(cache_dir) if cache_dir else None
+        self.max_disk_bytes = max_disk_bytes
+        # running upper bound on the disk tier's size, so a sweep of puts
+        # under the cap stays O(1) per put: the directory is only rescanned
+        # when the estimate crosses the cap (None = unknown, scan next put)
+        self._disk_bytes_estimate: int | None = None
         self.hits = 0
         self.misses = 0
 
@@ -244,10 +271,60 @@ class PlanCache:
             try:
                 path.parent.mkdir(parents=True, exist_ok=True)
                 tmp = path.with_suffix(f".tmp{os.getpid()}")
-                tmp.write_text(plan_to_json(plan))
+                text = plan_to_json(plan)
+                tmp.write_text(text)
                 tmp.replace(path)
             except OSError:
                 pass
+            else:
+                self._evict_disk(keep=path, written_bytes=len(text))
+
+    def _evict_disk(self, keep: Path, written_bytes: int) -> None:
+        """Shrink the disk tier to the size cap, oldest mtime first. The
+        just-written entry is never evicted (even if it alone exceeds the
+        cap). Best-effort: stat/unlink races with other processes are
+        ignored, never surfaced to the planning call.
+
+        The directory is only rescanned when the running estimate crosses
+        the cap — a sustained sweep writing under the cap costs O(1) per
+        put, not a full glob+stat of every entry. The estimate cannot see
+        other processes' writes; that is acceptable for a best-effort cap
+        (each writer still bounds its own contribution, and every scan
+        re-syncs to the directory's true size)."""
+        limit = (
+            self.max_disk_bytes
+            if self.max_disk_bytes is not None
+            else _env_max_disk_bytes()
+        )
+        if limit is None or self.cache_dir is None:
+            return
+        if self._disk_bytes_estimate is not None:
+            self._disk_bytes_estimate += written_bytes
+            if self._disk_bytes_estimate <= limit:
+                return
+        entries = []  # (mtime, size, path)
+        try:
+            for p in self.cache_dir.glob("*.json"):
+                try:
+                    st = p.stat()
+                except OSError:
+                    continue  # deleted by another process mid-scan
+                entries.append((st.st_mtime, st.st_size, p))
+        except OSError:
+            return
+        total = sum(size for _, size, _ in entries)
+        if total > limit:
+            for _, size, p in sorted(entries):
+                if p == keep:
+                    continue
+                try:
+                    p.unlink(missing_ok=True)
+                except OSError:
+                    continue
+                total -= size
+                if total <= limit:
+                    break
+        self._disk_bytes_estimate = total
 
     def clear(self) -> None:
         self._mem.clear()

@@ -20,7 +20,10 @@ params are never materialized) through the paper's planner and reports the
 planned activation-arena size next to XLA's temp allocation. Plans are
 served from the content-addressed plan cache (core/plan_io), so sweeping
 ``--all`` re-plans each unique graph once; set ``REPRO_PLAN_CACHE_DIR``
-to persist plans across runs.
+to persist plans across runs (and ``REPRO_PLAN_CACHE_MAX_BYTES`` to cap
+the disk tier). ``--search`` additionally runs the memory-aware
+order/fusion search (core/order_search, core/fusion_search) over each
+traced graph and reports the searched footprint + plan-cache hit rate.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
@@ -121,19 +124,22 @@ def build_step(arch: str, shape_name: str, mesh, *, seq_parallel: bool = False):
     return (jitted, (params_shape, tok, cache_shape, pos, act)), None
 
 
-def planner_report(jitted, specs, name: str) -> dict:
+def planner_report(jitted, specs, name: str, search: bool = False) -> dict:
     """Trace the step's jaxpr and run the paper's planner on it.
 
     ``trace_graph`` on the jitted callable works on ShapeDtypeStructs (no
     parameter materialization) and inlines the pjit body; the plan itself
-    comes from/through the content-addressed plan cache.
+    comes from/through the content-addressed plan cache. ``search=True``
+    additionally runs the memory-aware order/fusion searches over the
+    traced graph (each candidate plan served from the same cache) and
+    reports the best searched footprint next to the default-order plan.
     """
     from repro.core.planner import plan_graph
     from repro.trace.jaxpr_liveness import trace_graph
 
     graph = trace_graph(jitted, *specs, name=name)
     plan = plan_graph(graph, mode="offsets", strategy="auto")
-    return {
+    out = {
         "planner_total_gb": plan.total_size / 1e9,
         "planner_lb_gb": plan.lower_bound / 1e9,
         "planner_naive_gb": plan.naive_size / 1e9,
@@ -142,10 +148,31 @@ def planner_report(jitted, specs, name: str) -> dict:
         "plan_cache_hit": plan.cache_hit,
         "plan_wall_s": plan.plan_wall_s,
     }
+    if search:
+        from repro.core.fusion_search import fusion_search
+        from repro.core.order_search import search_order
+        from repro.core.plan_io import PlanCache
+
+        cache = PlanCache()
+        order_res = search_order(graph, iters=300, seed=0, cache=cache)
+        fusion_res = fusion_search(graph, max_rounds=40, cache=cache)
+        best = min(order_res.plan.total_size, fusion_res.plan.total_size)
+        hits = order_res.cache_hits + fusion_res.cache_hits
+        evals = hits + order_res.cache_misses + fusion_res.cache_misses
+        out.update({
+            "searched_total_gb": best / 1e9,
+            "search_delta_gb": (plan.total_size - best) / 1e9,
+            "search_fused_groups": fusion_res.n_fused_groups,
+            "search_plan_calls": evals,
+            "search_cache_hit_rate": round(hits / max(evals, 1), 4),
+            "search_wall_s": round(order_res.wall_s + fusion_res.wall_s, 3),
+        })
+    return out
 
 
 def run_one(arch: str, shape_name: str, multi_pod: bool = False,
-            seq_parallel: bool = False, activation_plan: bool = False) -> dict:
+            seq_parallel: bool = False, activation_plan: bool = False,
+            search: bool = False) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "2x16x16" if multi_pod else "16x16"
     t0 = time.perf_counter()
@@ -202,9 +229,11 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
         # xla_cost_analysis degraded to {}: flag it in the artifact so the
         # zeroed xla_* reference columns are not mistaken for real values
         out["xla_cost_unavailable"] = True
-    if activation_plan:
+    if activation_plan or search:
         try:
-            out.update(planner_report(jitted, specs, f"{arch}-{shape_name}"))
+            out.update(planner_report(
+                jitted, specs, f"{arch}-{shape_name}", search=search
+            ))
         except Exception as e:  # planner failure must not sink the dry-run
             out["planner_error"] = f"{type(e).__name__}: {e}"
     return out
@@ -218,6 +247,9 @@ def main() -> None:
     ap.add_argument("--seq-parallel", action="store_true")
     ap.add_argument("--activation-plan", action="store_true",
                     help="run the paper's planner on each step's jaxpr")
+    ap.add_argument("--search", action="store_true",
+                    help="also run the memory-aware order/fusion search "
+                         "over each traced graph (implies --activation-plan)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
@@ -237,7 +269,8 @@ def main() -> None:
     for arch, shape, mp in combos:
         try:
             res = run_one(arch, shape, mp, seq_parallel=args.seq_parallel,
-                          activation_plan=args.activation_plan)
+                          activation_plan=args.activation_plan,
+                          search=args.search)
         except Exception as e:  # a dry-run failure is a bug in our system
             res = {
                 "arch": arch, "shape": shape,

@@ -41,6 +41,18 @@ class Arena:
     def view(self, tensor_id: int, shape, dtype) -> np.ndarray:
         off = self.plan.offsets[tensor_id]
         nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize
+        # a too-large view would silently alias the NEXT tensor's planned
+        # slot — enforce both the per-tensor slot size and the arena end
+        if nbytes > self._sizes[tensor_id]:
+            raise ValueError(
+                f"tensor {tensor_id}: view of {nbytes} B exceeds planned "
+                f"{self._sizes[tensor_id]} B"
+            )
+        if off + nbytes > self.buf.nbytes:
+            raise ValueError(
+                f"tensor {tensor_id}: view [{off}, {off + nbytes}) exceeds "
+                f"arena of {self.buf.nbytes} B"
+            )
         return (
             self.buf[off : off + nbytes]
             .view(np.dtype(dtype))

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.graph import Graph
 from repro.core.planner import MemoryPlan, plan_graph
 from repro.models import transformer
 from repro.models.api import Model
@@ -83,6 +84,8 @@ class InferenceEngine:
         max_len: int = 256,
         plan_strategy: str = "auto",
         greedy: bool = True,
+        sample_seed: int | None = 0,
+        activation_graph: Graph | None = None,
     ):
         if cfg.family == "audio":
             raise NotImplementedError("engine drives decoder-only archs")
@@ -92,6 +95,11 @@ class InferenceEngine:
         self.n_slots = n_slots
         self.max_len = max_len
         self.greedy = greedy
+        # ONE engine-owned generator: a per-slot default_rng(self._wave)
+        # gave every slot in a wave the same seed, so slots with identical
+        # logits always emitted identical tokens and reruns were trivially
+        # correlated
+        self._sampler = np.random.default_rng(sample_seed)
 
         self.caches = self.model.init_cache(n_slots, max_len)
         self._reset = jax.jit(lambda c, keep: self.model.reset_slots(c, keep))
@@ -105,7 +113,9 @@ class InferenceEngine:
         tok0 = jnp.zeros((n_slots, 1), jnp.int32)
         pos0 = jnp.zeros((n_slots,), jnp.int32)
         act0 = jnp.ones((n_slots,), bool)
-        graph = trace_graph(
+        # a pre-searched graph (core/order_search, core/fusion_search) can
+        # be planned directly instead of tracing the default-order step
+        graph = activation_graph if activation_graph is not None else trace_graph(
             lambda p, t, c, pos, act: self.model.decode_step(
                 p, t, c, pos, active=act
             ),
@@ -198,6 +208,14 @@ class InferenceEngine:
                 self._slot_pos[slot] += 1
             self._slot_tokens[slot, 0] = req.prompt[-1]
 
+    def _sample_token(self, row: np.ndarray) -> int:
+        """Greedy argmax, or a draw from the engine-owned generator (so
+        consecutive draws — e.g. two slots in one wave — are independent,
+        while a fixed ``sample_seed`` keeps whole runs reproducible)."""
+        if self.greedy:
+            return int(row.argmax())
+        return int(self._sampler.choice(len(row), p=_softmax(row)))
+
     # ------------------------------------------------------------ serve
     def step(self) -> list[Request]:
         """One decode wave over all active slots; returns finished reqs."""
@@ -211,11 +229,7 @@ class InferenceEngine:
         finished: list[Request] = []
         for slot, req in list(self._active.items()):
             row = np.asarray(logits[slot])
-            nxt = int(row.argmax()) if self.greedy else int(
-                np.random.default_rng(self._wave).choice(
-                    len(row), p=_softmax(row)
-                )
-            )
+            nxt = self._sample_token(row)
             req.tokens.append(nxt)
             self._slot_tokens[slot, 0] = nxt
             self._slot_pos[slot] += 1

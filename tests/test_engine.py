@@ -99,6 +99,63 @@ def test_engine_slot_reuse_is_interval_valid():
             assert l1 <= f2, f"slot {slot}: intervals {ivals} overlap"
 
 
+def test_sampling_slots_with_identical_logits_can_diverge():
+    """Regression: per-slot default_rng(self._wave) seeded every slot in a
+    wave identically, so equal logits always produced equal tokens. The
+    engine-owned generator must let consecutive draws differ."""
+    cfg = get_reduced("qwen3-0.6b")
+    model = Model.for_config(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = InferenceEngine(cfg, params, n_slots=2, max_len=32,
+                             greedy=False, sample_seed=0)
+    row = np.zeros(cfg.vocab, np.float32)  # identical (flat) logits
+    draws = [engine._sample_token(row) for _ in range(32)]
+    assert len(set(draws)) > 1, "identical logits must not pin the sample"
+    # a fixed seed still makes whole runs reproducible
+    engine2 = InferenceEngine(cfg, params, n_slots=2, max_len=32,
+                              greedy=False, sample_seed=0)
+    assert [engine2._sample_token(row) for _ in range(32)] == draws
+    # and a different seed gives a different trajectory
+    engine3 = InferenceEngine(cfg, params, n_slots=2, max_len=32,
+                              greedy=False, sample_seed=1)
+    assert [engine3._sample_token(row) for _ in range(32)] != draws
+
+
+def test_engine_accepts_pre_searched_graph():
+    """The outer search hands the engine a reordered/fused graph; the
+    engine plans it instead of the default-order trace (decode outputs are
+    unchanged — the plan is a memory artifact, not an executor)."""
+    import jax.numpy as jnp
+
+    from repro.core.fusion_search import fusion_search
+    from repro.trace.jaxpr_liveness import trace_graph
+
+    cfg = get_reduced("qwen3-0.6b")
+    model = Model.for_config(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_slots, max_len = 2, 32
+    caches = model.init_cache(n_slots, max_len)
+    graph = trace_graph(
+        lambda p, t, c, pos, act: model.decode_step(p, t, c, pos, active=act),
+        params,
+        jnp.zeros((n_slots, 1), jnp.int32),
+        caches,
+        jnp.zeros((n_slots,), jnp.int32),
+        jnp.ones((n_slots,), bool),
+        name=f"{cfg.name}-decode",
+    )
+    searched = fusion_search(graph)
+    engine = InferenceEngine(cfg, params, n_slots=n_slots, max_len=max_len,
+                             activation_graph=searched.graph)
+    plan = engine.memory_report.activation_plan
+    assert plan.total_size == searched.plan.total_size
+    assert plan.total_size <= searched.baseline_plan.total_size
+    # the engine still serves correctly off the searched plan
+    engine.submit(np.arange(4, dtype=np.int32), max_new_tokens=3)
+    done = engine.run_until_done()
+    assert len(done) == 1 and len(done[0].tokens) == 3
+
+
 def test_engine_memory_report():
     cfg = get_reduced("qwen3-0.6b")
     model = Model.for_config(cfg)

@@ -1,0 +1,233 @@
+"""Order/fusion search: incremental-record correctness, topo validity,
+determinism, and never-worse-than-baseline guarantees.
+
+The searches are the outer loop the plan cache was built for, so these
+tests also pin the loop's contract: every candidate costed through
+``plan_records``, identical results for identical seeds, and results that
+are real topological orders (or valid fused partitions) of the input.
+"""
+
+import collections
+import random
+
+import pytest
+
+from repro.core.fusion_search import (
+    FusionSearchResult,
+    fuse_groups,
+    fusion_search,
+    internal_bytes,
+)
+from repro.core.graph import Graph, graph_from_records
+from repro.core.order_search import (
+    IncrementalRecords,
+    memory_aware_topo_order,
+    search_order,
+    simulated_annealing_order,
+)
+from repro.core.plan_io import PlanCache
+from repro.core.records import make_records
+from repro.models.convnets import PAPER_NETWORKS
+
+NETS = ["mobilenet_v1", "blazeface", "inception_v3"]
+
+
+def _op_multiset(g: Graph):
+    return collections.Counter((op.name, op.inputs, op.outputs) for op in g.ops)
+
+
+def _random_graph(seed: int, n: int = 24) -> Graph:
+    rng = random.Random(seed)
+    recs = []
+    for i in range(n):
+        a = rng.randrange(12)
+        b = rng.randrange(a, 12)
+        recs.append((a, b, 64 * rng.randrange(1, 16)))
+    return graph_from_records(make_records(recs), name=f"rand{seed}")
+
+
+# ------------------------------------------------- incremental records
+
+
+@pytest.mark.parametrize("net", ["mobilenet_v2", "inception_v3"])
+def test_incremental_records_match_full_rebuild(net):
+    """After any sequence of legal adjacent swaps, the incremental records
+    equal a from-scratch extraction on the reordered graph."""
+    g = PAPER_NETWORKS[net]()
+    inc = IncrementalRecords(g)
+    rng = random.Random(0)
+    n = len(g.ops)
+    for _ in range(300):
+        k = rng.randrange(n - 1)
+        if inc.can_swap(k):
+            inc.swap(k)
+    reordered = inc.reordered_graph()
+    reordered.validate()
+    assert sorted(inc.records()) == sorted(reordered.usage_records())
+
+
+def test_incremental_swap_is_self_inverse():
+    g = PAPER_NETWORKS["inception_v3"]()
+    inc = IncrementalRecords(g)
+    before_order = list(inc.order)
+    before = sorted(inc.records())
+    k = next(k for k in range(len(g.ops) - 1) if inc.can_swap(k))
+    inc.swap(k)
+    inc.swap(k)
+    assert inc.order == before_order
+    assert sorted(inc.records()) == before
+
+
+def test_can_swap_refuses_dependent_pair():
+    g = PAPER_NETWORKS["mobilenet_v1"]()  # pure chain: nothing may swap
+    inc = IncrementalRecords(g)
+    assert not any(inc.can_swap(k) for k in range(len(g.ops) - 1))
+
+
+# ------------------------------------------------------- order search
+
+
+@pytest.mark.parametrize("net", NETS)
+def test_search_order_valid_topo_and_same_multiset(net):
+    g = PAPER_NETWORKS[net]()
+    res = search_order(g, iters=150, seed=0)
+    res.graph.validate()
+    assert _op_multiset(res.graph) == _op_multiset(g)
+    assert res.graph.tensors == g.tensors
+    assert res.graph.boundary_ids == g.boundary_ids
+    assert sorted(res.order) == list(range(len(g.ops)))
+
+
+@pytest.mark.parametrize("net", NETS)
+def test_search_order_never_worse_than_baseline(net):
+    res = search_order(PAPER_NETWORKS[net](), iters=150, seed=0)
+    assert res.plan.total_size <= res.baseline_plan.total_size
+    assert res.delta_bytes >= 0
+
+
+def test_search_order_deterministic_for_fixed_seed():
+    g = _random_graph(3)
+    a = search_order(g, iters=200, seed=7)
+    b = search_order(g, iters=200, seed=7)
+    assert a.order == b.order
+    assert a.plan.total_size == b.plan.total_size
+    assert a.plan.offsets == b.plan.offsets
+
+
+def test_search_order_counts_cache_traffic():
+    cache = PlanCache()
+    res = search_order(_random_graph(5), iters=200, seed=0, cache=cache)
+    assert res.evaluations >= 2
+    assert res.cache_hits + res.cache_misses == cache.hits + cache.misses
+    assert 0.0 <= res.cache_hit_rate <= 1.0
+    # annealing revisits record multisets: a warm rerun must be all hits
+    rerun = search_order(_random_graph(5), iters=200, seed=0, cache=cache)
+    assert rerun.cache_misses == 0 and rerun.cache_hit_rate == 1.0
+
+
+def test_search_order_never_worse_even_with_proxy_objective():
+    """The lower-bound proxy can prefer an order whose REAL plan is
+    larger; the returned plan must still honor the never-worse contract."""
+    for seed in range(6):
+        g = _random_graph(seed)
+        res = search_order(g, iters=200, seed=seed, objective="lower_bound")
+        assert res.plan.total_size <= res.baseline_plan.total_size
+        res.graph.validate()
+        assert _op_multiset(res.graph) == _op_multiset(g)
+
+
+def test_memory_aware_topo_order_valid_and_same_multiset():
+    for seed in range(4):
+        g = _random_graph(seed)
+        g2 = memory_aware_topo_order(g)
+        g2.validate()
+        assert _op_multiset(g2) == _op_multiset(g)
+
+
+def test_simulated_annealing_back_compat_wrapper():
+    g = _random_graph(11)
+    g2 = simulated_annealing_order(g, iters=100, seed=0)
+    g2.validate()
+    assert _op_multiset(g2) == _op_multiset(g)
+
+
+# ------------------------------------------------------ fusion search
+
+
+def test_fuse_groups_requires_contiguous_partition():
+    g = PAPER_NETWORKS["mobilenet_v1"]()
+    n = len(g.ops)
+    with pytest.raises(ValueError):
+        fuse_groups(g, [(0, 2), (1,)] + [(i,) for i in range(3, n)])
+
+
+def test_fuse_groups_internalizes_only_fully_consumed_tensors():
+    g = PAPER_NETWORKS["mobilenet_v1"]()
+    fused = fuse_groups(g, [(0, 1)] + [(i,) for i in range(2, len(g.ops))])
+    fused.validate()
+    # the tensor flowing from op0 to op1 is consumed beyond the group
+    # (op1's output feeds op2), so only tensors whose every consumer is
+    # inside the group may vanish from the op list
+    used = {t for op in fused.ops for t in (*op.inputs, *op.outputs)}
+    for op in g.ops[2:]:
+        for t in op.inputs:
+            assert t in used
+    assert fused.tensors == g.tensors  # specs are never dropped
+
+
+@pytest.mark.parametrize("net", NETS)
+def test_fusion_search_never_worse_and_valid(net):
+    g = PAPER_NETWORKS[net]()
+    res = fusion_search(g)
+    assert isinstance(res, FusionSearchResult)
+    res.graph.validate()
+    assert res.plan.total_size <= res.baseline_plan.total_size
+    # partition covers the op indices exactly, in order
+    flat = [i for grp in res.groups for i in grp]
+    assert flat == list(range(len(g.ops)))
+    # planned tensors are a subset of the original intermediates
+    orig = set(g.intermediate_ids())
+    assert {r.tensor_id for r in res.plan.records} <= orig
+
+
+def test_fusion_search_strictly_improves_mobilenet_v1():
+    """The breadth peak of MobileNet v1 is a producer->consumer pair of
+    large tensors no reordering can move — fusion internalizes it."""
+    res = fusion_search(PAPER_NETWORKS["mobilenet_v1"]())
+    assert res.delta_bytes > 0
+    assert res.n_fused_groups >= 1
+    assert res.internalized_bytes > 0
+
+
+def test_fusion_search_respects_local_budget():
+    g = PAPER_NETWORKS["mobilenet_v1"]()
+    budget = 2**20  # 1 MiB: too small for the multi-MiB early tensors
+    res = fusion_search(g, local_budget=budget)
+    for grp in res.groups:
+        if len(grp) > 1:
+            assert internal_bytes(g, grp) <= budget
+    # zero budget means nothing can fuse
+    res0 = fusion_search(g, local_budget=0)
+    assert res0.n_fused_groups == 0
+    assert res0.plan.total_size == res0.baseline_plan.total_size
+
+
+def test_fusion_search_deterministic():
+    g = PAPER_NETWORKS["posenet"]()
+    a = fusion_search(g)
+    b = fusion_search(g)
+    assert a.groups == b.groups
+    assert a.plan.total_size == b.plan.total_size
+
+
+def test_order_and_fusion_share_plan_cache():
+    """The outer-sweep regime: re-running both searches against a warm
+    shared cache is pure cache traffic."""
+    g = PAPER_NETWORKS["blazeface"]()
+    cache = PlanCache()
+    search_order(g, iters=100, seed=0, cache=cache)
+    fusion_search(g, cache=cache)
+    o2 = search_order(g, iters=100, seed=0, cache=cache)
+    f2 = fusion_search(g, cache=cache)
+    assert o2.cache_misses == 0
+    assert f2.cache_misses == 0

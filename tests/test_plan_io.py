@@ -165,6 +165,76 @@ def test_disk_cache_ignores_corrupt_entry(tmp_path):
     assert plan_records(recs, cache=plan_io.PlanCache(tmp_path)).cache_hit
 
 
+def _fill_disk_cache(cache, n, start=0):
+    """Write n distinct single-record plans; returns their disk paths in
+    write (mtime) order, artificially spaced so eviction order is exact."""
+    import os as _os
+
+    from repro.core.planner import _cache_strategy_key
+
+    paths = []
+    for i in range(start, start + n):
+        recs = [TensorUsageRecord(0, i + 1, 64 * (i + 1), tensor_id=i)]
+        plan_records(recs, cache=cache)
+        key = plan_io.plan_signature(
+            recs, mode="offsets", strategy=_cache_strategy_key("offsets", "auto")
+        )
+        path = cache.cache_dir / f"{key}.json"
+        assert path.exists()
+        _os.utime(path, (1_000_000 + i, 1_000_000 + i))
+        paths.append(path)
+    return paths
+
+
+def test_disk_cache_evicts_oldest_when_over_cap(tmp_path):
+    cache = plan_io.PlanCache(tmp_path, max_disk_bytes=1)  # everything over cap
+    paths = _fill_disk_cache(cache, 4)
+    # each put evicted all OLDER entries; the newest write always survives
+    assert not any(p.exists() for p in paths[:-1])
+    assert paths[-1].exists()
+
+
+def test_disk_cache_cap_keeps_newest_entries(tmp_path):
+    cache = plan_io.PlanCache(tmp_path)
+    probe = _fill_disk_cache(cache, 1)[0]
+    per_entry = probe.stat().st_size
+    cache.max_disk_bytes = int(per_entry * 2.5)  # room for ~2 entries
+    paths = _fill_disk_cache(cache, 3, start=1)
+    alive = [p for p in [probe, *paths] if p.exists()]
+    total = sum(p.stat().st_size for p in alive)
+    assert total <= cache.max_disk_bytes
+    assert paths[-1].exists(), "the just-written entry is never evicted"
+    assert not probe.exists(), "oldest mtime goes first"
+
+
+def test_disk_cache_cap_via_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_CACHE_MAX_BYTES", "1")
+    cache = plan_io.PlanCache(tmp_path)
+    paths = _fill_disk_cache(cache, 3)
+    assert sum(p.exists() for p in paths) == 1
+    # invalid / non-positive values disable eviction rather than raise
+    monkeypatch.setenv("REPRO_PLAN_CACHE_MAX_BYTES", "not-a-number")
+    _fill_disk_cache(plan_io.PlanCache(tmp_path), 3, start=3)
+    monkeypatch.setenv("REPRO_PLAN_CACHE_MAX_BYTES", "0")
+    _fill_disk_cache(plan_io.PlanCache(tmp_path), 3, start=6)
+
+
+def test_disk_cache_eviction_cross_process_safe(tmp_path):
+    """Another process evicting an entry must look like a plain miss to a
+    cache that still remembers it on disk only — and eviction itself must
+    shrug off files vanishing mid-scan."""
+    writer = plan_io.PlanCache(tmp_path)
+    recs = make_records(RECS)
+    plan_records(recs, cache=writer)
+    # a second process with a tiny cap floods the dir and evicts our entry
+    evictor = plan_io.PlanCache(tmp_path, max_disk_bytes=1)
+    _fill_disk_cache(evictor, 2)
+    reader = plan_io.PlanCache(tmp_path)  # fresh process, cold memory tier
+    p = plan_records(recs, cache=reader)
+    assert not p.cache_hit  # evicted -> miss -> re-planned and re-cached
+    assert plan_records(recs, cache=reader).cache_hit  # memory tier intact
+
+
 def test_signature_includes_planner_revision(monkeypatch):
     recs = make_records(RECS)
     base = plan_io.plan_signature(recs, mode="offsets", strategy="auto")

@@ -8,14 +8,18 @@ Invariants (for EVERY strategy, paper's and baselines'):
     instances within the known-greedy gap (and never beat it)
 """
 
+import collections
+
 import pytest
 
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import baselines, extensions, offsets, optimal, shared_objects
+from repro.core.fusion_search import fusion_search
 from repro.core.graph import graph_from_records
 from repro.core.offsets import from_shared_objects
+from repro.core.order_search import memory_aware_topo_order, search_order
 from repro.core.records import TensorUsageRecord
 from repro.core.validate import check_offsets, check_shared_objects
 
@@ -91,6 +95,48 @@ def test_greedy_vs_optimal_offsets(recs):
         total = fn(recs).total_size
         assert total >= opt, f"{name} beat the optimum: {total} < {opt}"
         assert total <= 2 * opt, f"{name} far from optimum: {total} vs {opt}"
+
+
+@settings(max_examples=40, deadline=None)
+@given(usage_records(max_tensors=12, max_ops=10, max_size=64))
+def test_order_searches_return_valid_topo_orders(recs):
+    """Every graph returned by the order searches is a topological order
+    of the input with an identical op multiset and tensor table, and the
+    annealing result is deterministic for a fixed seed."""
+    g = graph_from_records(recs)
+    ops = collections.Counter(
+        (op.name, op.inputs, op.outputs) for op in g.ops
+    )
+    res = search_order(g, iters=40, seed=3)
+    for out in (memory_aware_topo_order(g), res.graph):
+        out.validate()
+        assert collections.Counter(
+            (op.name, op.inputs, op.outputs) for op in out.ops
+        ) == ops
+        assert out.tensors == g.tensors
+        # intervals may legitimately change; the planned tensor multiset
+        # (ids + sizes) must not
+        assert sorted(
+            (r.tensor_id, r.size) for r in out.usage_records(alignment=1)
+        ) == sorted(
+            (r.tensor_id, r.size) for r in g.usage_records(alignment=1)
+        )
+    assert res.plan.total_size <= res.baseline_plan.total_size
+    again = search_order(g, iters=40, seed=3)
+    assert again.order == res.order
+
+
+@settings(max_examples=30, deadline=None)
+@given(usage_records(max_tensors=10, max_ops=8, max_size=64))
+def test_fusion_search_valid_and_never_worse(recs):
+    """The fused graph is valid, plans only original intermediates, and
+    its planned arena never exceeds the unfused baseline."""
+    g = graph_from_records(recs)
+    res = fusion_search(g, max_group_ops=3)
+    res.graph.validate()
+    assert res.plan.total_size <= res.baseline_plan.total_size
+    assert {r.tensor_id for r in res.plan.records} <= set(g.intermediate_ids())
+    assert [i for grp in res.groups for i in grp] == list(range(len(g.ops)))
 
 
 @settings(max_examples=60, deadline=None)

@@ -104,6 +104,33 @@ def test_executor_runs_many_times_same_arena():
     assert id(ex.arena.buf) == buf_id  # no reallocation between runs
 
 
+def test_arena_view_is_bounds_checked():
+    """Regression: ``Arena.view`` used to hand out views past a tensor's
+    planned slot, silently aliasing the NEXT tensor's bytes — ``store``
+    checked, ``view`` did not."""
+    from repro.core.planner import plan_records
+    from repro.core.records import make_records
+    from repro.runtime.arena import Arena
+
+    # two 64 B tensors live simultaneously -> distinct adjacent slots
+    plan = plan_records(make_records([(0, 1, 64), (0, 1, 64)]), use_cache=False)
+    arena = Arena(plan)
+    fits = arena.view(0, (16,), np.float32)  # exactly the planned 64 B
+    assert fits.nbytes == 64
+
+    neighbor = arena.store(1, np.full(16, 7.0, np.float32))
+    with pytest.raises(ValueError, match="exceeds planned"):
+        arena.view(0, (17,), np.float32)  # 68 B > 64 B slot
+    with pytest.raises(ValueError, match="exceeds"):
+        arena.view(0, (16,), np.float64)  # same count, fatter dtype
+    np.testing.assert_array_equal(neighbor, np.full(16, 7.0, np.float32))
+
+    # a stale plan offset pointing past the buffer is also refused
+    arena.plan.offsets[0] = arena.buf.nbytes - 32
+    with pytest.raises(ValueError, match="arena"):
+        arena.view(0, (16,), np.float32)
+
+
 def test_boundary_tensors_excluded():
     fn, args = CASES["mlp"]
     g = trace_graph(fn, *args)
