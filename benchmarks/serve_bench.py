@@ -1,0 +1,148 @@
+"""Plan-artifact serving benchmark: compile→artifact→serve, measured.
+
+For each benchmarked architecture (reduced configs — this runs on CPU CI)
+the benchmark:
+
+1. AOT-compiles the decode-step plan with ``--search`` (order annealing +
+   fusion search on the *transformer decode graph* — the ROADMAP retarget)
+   and records the searched-vs-greedy planned footprint;
+2. publishes the bundle and cold-starts an ``InferenceEngine`` from it,
+   asserting — via the trace/planner instrumentation counters — that the
+   bundle path performs ZERO jaxpr traces and ZERO planner calls;
+3. cold-starts a plan-at-construction engine (plan cache cleared) and
+   records both times, so the artifact's cold-start win is a committed
+   number, not a claim.
+
+Hard checks (regressions fail CI):
+* searched footprint <= greedy footprint on EVERY arch (never-worse);
+* searched footprint strictly smaller on >= 2 archs;
+* the bundle-served engine does zero traces and zero planner calls.
+
+Usage:
+    PYTHONPATH=src python benchmarks/serve_bench.py --quick \
+        --out BENCH_serve.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+
+import jax
+
+import repro.core.planner as planner
+import repro.trace.jaxpr_liveness as tracer
+from repro.configs.base import get_reduced
+from repro.core import plan_io
+from repro.launch.compile import compile_and_publish
+from repro.models.api import Model
+from repro.runtime.engine import InferenceEngine
+
+ARCHS = ("qwen3-0.6b", "granite-moe-3b-a800m", "mamba2-2.7b", "zamba2-7b")
+KB = 2**10
+
+
+def bench_arch(arch: str, bundle_dir: str, *, iters: int,
+               fusion_rounds: int, emit=print) -> dict:
+    cfg = get_reduced(arch)
+    res = compile_and_publish(
+        cfg, bundle_dir, n_slots=2, max_len=64,
+        search=True, search_iters=iters, fusion_rounds=fusion_rounds,
+        command="benchmarks/serve_bench.py",
+    )
+    greedy = res.greedy_plan.total_size
+    searched = res.bundle.plan.total_size
+    assert searched <= greedy, (
+        f"{arch}: searched plan {searched} > greedy {greedy} "
+        f"(never-worse contract broken)"
+    )
+
+    model = Model.for_config(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    traces0, plans0 = tracer.TRACE_CALLS, planner.PLAN_CALLS
+    t0 = time.perf_counter()
+    engine = InferenceEngine(cfg, params, n_slots=2, max_len=64,
+                             plan_bundle=bundle_dir)
+    cold_with = time.perf_counter() - t0
+    assert engine.memory_report.plan_source == "bundle", (
+        f"{arch}: expected bundle-served plan, got "
+        f"{engine.memory_report.plan_source} "
+        f"({engine.memory_report.bundle_warning})"
+    )
+    assert tracer.TRACE_CALLS == traces0 and planner.PLAN_CALLS == plans0, (
+        f"{arch}: bundle path traced or planned at construction"
+    )
+
+    plan_io.default_cache().clear()  # true cold start for the baseline
+    t0 = time.perf_counter()
+    InferenceEngine(cfg, params, n_slots=2, max_len=64)
+    cold_without = time.perf_counter() - t0
+
+    row = {
+        "arch": arch,
+        "ops": len(res.graph.ops),
+        "records": len(res.bundle.plan.records),
+        "greedy_bytes": greedy,
+        "searched_bytes": searched,
+        "delta_bytes": greedy - searched,
+        "searched_strategy": res.bundle.plan.strategy,
+        "fused_groups": (
+            res.fusion_result.n_fused_groups if res.fusion_result else 0
+        ),
+        "compile_wall_s": round(res.wall_s, 3),
+        "cold_start_with_bundle_s": round(cold_with, 4),
+        "cold_start_without_s": round(cold_without, 4),
+        "cold_start_speedup": round(cold_without / max(cold_with, 1e-9), 2),
+    }
+    emit(
+        f"{arch}: greedy {greedy / KB:.0f} KiB -> searched "
+        f"{searched / KB:.0f} KiB ({row['fused_groups']} fused groups); "
+        f"cold start {cold_with:.3f}s with bundle vs {cold_without:.3f}s "
+        f"without ({row['cold_start_speedup']}x)"
+    )
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--archs", nargs="*", default=list(ARCHS))
+    args = ap.parse_args()
+    iters = 120 if args.quick else 300
+    fusion_rounds = 20 if args.quick else 40
+
+    rows = []
+    with tempfile.TemporaryDirectory() as bundle_dir:
+        for arch in args.archs:
+            rows.append(
+                bench_arch(arch, bundle_dir, iters=iters,
+                           fusion_rounds=fusion_rounds)
+            )
+
+    strict = sum(r["delta_bytes"] > 0 for r in rows)
+    assert strict >= 2, (
+        f"search strictly improved only {strict} arch(es); expected >= 2 "
+        f"on transformer decode graphs"
+    )
+    print(f"# {strict}/{len(rows)} archs strictly improved by search")
+
+    if args.out:
+        doc = {
+            "bench": "plan_artifact_serve",
+            "n_slots": 2,
+            "max_len": 64,
+            "search_iters": iters,
+            "rows": rows,
+        }
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,18 +1,54 @@
 #!/usr/bin/env bash
-# Tier-1 CI: full test suite, then the tracked planner-scaling benchmark.
+# Tier-1 CI: full test suite, then the tracked benchmarks.
 #
 #   ./scripts/ci.sh            # everything
 #   SKIP_BENCH=1 ./scripts/ci.sh   # tests only
 #
-# BENCH_planner.json (n, wall-seconds per strategy fast vs oracle,
-# total_size, speedup) is the committed perf trajectory — regenerate it
-# here so planner regressions show up in review diffs.
+# BENCH_planner.json / BENCH_search.json / BENCH_serve.json are the
+# committed perf trajectories — regenerate them here so planner, search,
+# and serving regressions show up in review diffs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# no bytecode in the tree: 8 .pyc files were accidentally committed once
+if git ls-files | grep -qE '(^|/)__pycache__/|\.pyc$'; then
+    echo "ERROR: tracked .pyc/__pycache__ files:" >&2
+    git ls-files | grep -E '(^|/)__pycache__/|\.pyc$' >&2
+    exit 1
+fi
+
 python -m pytest -q
+
+# compile→artifact→serve round trip: AOT-compile a reduced arch, start the
+# engine from the bundle, and assert — via the instrumentation counters —
+# that serving performed zero jaxpr traces and zero planner calls
+python - <<'PY'
+import tempfile
+import jax
+import repro.core.planner as planner
+import repro.trace.jaxpr_liveness as tracer
+from repro.configs.base import get_reduced
+from repro.launch.compile import compile_and_publish
+from repro.models.api import Model
+from repro.runtime.engine import InferenceEngine
+
+cfg = get_reduced("qwen3-0.6b")
+with tempfile.TemporaryDirectory() as d:
+    compile_and_publish(cfg, d, n_slots=2, max_len=48, command="scripts/ci.sh")
+    params = Model.for_config(cfg).init(jax.random.PRNGKey(0))
+    t0, p0 = tracer.TRACE_CALLS, planner.PLAN_CALLS
+    eng = InferenceEngine(cfg, params, n_slots=2, max_len=48, plan_bundle=d)
+    assert eng.memory_report.plan_source == "bundle", eng.memory_report.bundle_warning
+    assert tracer.TRACE_CALLS == t0, "bundle-served engine traced a jaxpr"
+    assert planner.PLAN_CALLS == p0, "bundle-served engine invoked the planner"
+    import numpy as np
+    eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=3)
+    done = eng.run_until_done()
+    assert len(done) == 1 and len(done[0].tokens) == 3
+print("compile→serve round trip: bundle-served, zero traces, zero plans")
+PY
 
 if [[ -z "${SKIP_BENCH:-}" ]]; then
     python benchmarks/planner_scaling.py --quick --out BENCH_planner.json
@@ -20,4 +56,7 @@ if [[ -z "${SKIP_BENCH:-}" ]]; then
     # config and strictly smaller on >= 3 (BENCH_search.json is the
     # committed trajectory)
     python benchmarks/order_search_bench.py --quick --out BENCH_search.json
+    # plan-artifact serving smoke: searched <= greedy on every arch,
+    # bundle path does zero trace/plan work, cold-start numbers tracked
+    python benchmarks/serve_bench.py --quick --out BENCH_serve.json
 fi

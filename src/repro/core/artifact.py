@@ -1,0 +1,354 @@
+"""Plan bundles: ahead-of-time compiled memory plans as serving artifacts.
+
+The paper's planner is an ahead-of-time optimization — "the memory manager
+needs to run only once before the first inference" (§5). This module makes
+that literal: a :class:`PlanBundle` carries everything a serving process
+needs to materialize its activation arena *without* tracing a jaxpr or
+running a planning strategy:
+
+* the chosen :class:`~repro.core.planner.MemoryPlan` (usage records,
+  strategy name, offsets, total size) serialized through ``plan_io``;
+* the searched order / fusion partition that produced it (when
+  ``launch/compile.py --search`` found a smaller plan than the default
+  program order), so provenance of the footprint is auditable;
+* two fingerprints: a **cheap config-level** one (:func:`decode_fingerprint`
+  — hash of the graph-shaping inputs: architecture config, slot count,
+  cache length, pipeline revision) that a serving engine verifies without
+  tracing anything, and a **structural** one (:func:`graph_fingerprint` —
+  hash of the traced op/tensor graph) that the compile step records and
+  the fallback path can check after a fresh trace.
+
+Bundles are stored content-addressed under a directory managed by
+:class:`BundleManifest`: the bundle file is named by the sha256 of its
+canonical JSON (byte-deterministic — ``plan_wall_s`` is zeroed at publish
+time), and ``manifest.json`` maps human-readable bucket keys
+(``arch|layers|d_model|slots|len|dtype``) to bundle files. Two buckets
+whose compiled bundles coincide byte-for-byte (config aliases, recompiles)
+share one file. Loaders reject unknown format versions rather than
+guessing.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from pathlib import Path
+from typing import TYPE_CHECKING, Any
+
+from repro.core import plan_io
+
+if TYPE_CHECKING:  # keep this module importable without jax
+    from repro.configs.base import ArchConfig
+    from repro.core.graph import Graph
+    from repro.core.planner import MemoryPlan
+
+BUNDLE_FORMAT_VERSION = 1
+
+# Revision of the trace→plan pipeline semantics. Part of every
+# fingerprint: bump it when the tracer (scan expansion, inlining set),
+# graph extraction, or any MODEL IMPLEMENTATION (``models/``) may produce
+# a different decode graph for the same config, and previously compiled
+# bundles self-invalidate instead of silently serving a plan a current
+# trace would no longer produce. The config-level fingerprint cannot see
+# code changes on its own — this constant is how they re-key; for a
+# trace-backed check at serving time use
+# ``InferenceEngine(verify_bundle=True)``, which compares the stored
+# ``graph_fingerprint`` against a fresh trace. Planner output changes are
+# covered separately by ``plan_io.PLANNER_REVISION``.
+PIPELINE_REVISION = 1
+
+
+# ------------------------------------------------------------ fingerprints
+
+
+def _sha(payload: Any) -> str:
+    text = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(text.encode()).hexdigest()
+
+
+def decode_fingerprint(cfg: "ArchConfig", *, n_slots: int, max_len: int) -> str:
+    """Hash of everything that shapes the decode-step graph, computable in
+    microseconds — no trace, no planner. Covers the full architecture
+    config (minus ``source``, a citation string that cannot affect any
+    tensor), the serving bucket (``n_slots``, ``max_len``), and the
+    pipeline/planner revisions."""
+    cfg_obj = dataclasses.asdict(cfg)
+    cfg_obj.pop("source", None)
+    return _sha(
+        {
+            "format_version": BUNDLE_FORMAT_VERSION,
+            "pipeline_revision": PIPELINE_REVISION,
+            "planner_revision": plan_io.PLANNER_REVISION,
+            "config": cfg_obj,
+            "n_slots": n_slots,
+            "max_len": max_len,
+        }
+    )
+
+
+def graph_fingerprint(graph: "Graph") -> str:
+    """Structural hash of a traced graph: op names and tensor wiring in
+    execution order, tensor byte sizes, boundary set. Two graphs with the
+    same fingerprint yield identical usage records, hence identical plans."""
+    return _sha(
+        {
+            "ops": [
+                [op.name, list(op.inputs), list(op.outputs)]
+                for op in graph.ops
+            ],
+            "tensors": sorted(
+                (t.tensor_id, t.nbytes) for t in graph.tensors.values()
+            ),
+            "boundary": sorted(graph.boundary_ids),
+        }
+    )
+
+
+def bucket_key(cfg: "ArchConfig", *, n_slots: int, max_len: int) -> str:
+    """Human-readable manifest index for an (arch, n_slots, max_len, dtype)
+    serving bucket. Layer count / width distinguish full configs from
+    their ``reduced()`` variants, which share ``cfg.name``. The fingerprint
+    (stored alongside) remains the actual correctness guard."""
+    return (
+        f"{cfg.name}|L{cfg.n_layers}|d{cfg.d_model}"
+        f"|slots{n_slots}|len{max_len}|{cfg.dtype}"
+    )
+
+
+# ----------------------------------------------------------------- bundles
+
+
+@dataclasses.dataclass
+class PlanBundle:
+    """One compiled decode-graph memory plan, ready to serve from.
+
+    ``plan.plan_wall_s`` is normalized to 0.0 so the canonical encoding is
+    byte-deterministic (content addressing stays stable across recompiles
+    of an unchanged graph).
+    """
+
+    fingerprint: str  # decode_fingerprint of the compiled bucket
+    graph_fingerprint: str  # structural hash of the traced graph
+    arch: str
+    n_slots: int
+    max_len: int
+    dtype: str
+    plan: "MemoryPlan"
+    # searched-order op permutation (original index order) when order
+    # search won; None when the default program order was kept
+    order: list[int] | None = None
+    # fusion partition (contiguous op-index groups) when fusion won
+    fusion_groups: list[list[int]] | None = None
+    # deterministic compile-time metadata: tool, strategy, search stats,
+    # greedy-vs-searched footprints, xla_temp_bytes when measured
+    provenance: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_size(self) -> int:
+        return self.plan.total_size
+
+    def summary(self) -> str:
+        searched = self.provenance.get("searched_total_bytes")
+        greedy = self.provenance.get("greedy_total_bytes")
+        extra = ""
+        if searched is not None and greedy is not None:
+            extra = (
+                f" (greedy {greedy / 2**20:.3f} MiB -> "
+                f"searched {searched / 2**20:.3f} MiB)"
+            )
+        return (
+            f"bundle {self.arch} slots={self.n_slots} len={self.max_len} "
+            f"{self.dtype}: {self.plan.total_size / 2**20:.3f} MiB "
+            f"[{self.plan.strategy}]{extra}"
+        )
+
+
+def bundle_to_obj(bundle: PlanBundle) -> dict:
+    plan = dataclasses.replace(bundle.plan, plan_wall_s=0.0)
+    return {
+        "format_version": BUNDLE_FORMAT_VERSION,
+        "fingerprint": bundle.fingerprint,
+        "graph_fingerprint": bundle.graph_fingerprint,
+        "arch": bundle.arch,
+        "n_slots": bundle.n_slots,
+        "max_len": bundle.max_len,
+        "dtype": bundle.dtype,
+        "plan": plan_io.plan_to_obj(plan),
+        "order": bundle.order,
+        "fusion_groups": bundle.fusion_groups,
+        "provenance": bundle.provenance,
+    }
+
+
+def bundle_from_obj(obj: dict) -> PlanBundle:
+    if not isinstance(obj, dict):
+        raise ValueError(
+            f"plan bundle must be a JSON object, got {type(obj).__name__}"
+        )
+    version = obj.get("format_version")
+    if version != BUNDLE_FORMAT_VERSION:
+        raise ValueError(
+            f"unsupported plan-bundle format version {version!r} "
+            f"(this build reads version {BUNDLE_FORMAT_VERSION})"
+        )
+    return PlanBundle(
+        fingerprint=obj["fingerprint"],
+        graph_fingerprint=obj["graph_fingerprint"],
+        arch=obj["arch"],
+        n_slots=obj["n_slots"],
+        max_len=obj["max_len"],
+        dtype=obj["dtype"],
+        plan=plan_io.plan_from_obj(obj["plan"]),
+        order=obj["order"],
+        fusion_groups=obj["fusion_groups"],
+        provenance=obj["provenance"] or {},
+    )
+
+
+def bundle_to_json(bundle: PlanBundle) -> str:
+    """Canonical encoding: sorted keys, fixed separators — byte-stable."""
+    return json.dumps(
+        bundle_to_obj(bundle), sort_keys=True, separators=(",", ":")
+    )
+
+
+def bundle_from_json(text: str) -> PlanBundle:
+    return bundle_from_obj(json.loads(text))
+
+
+def save_bundle(bundle: PlanBundle, path: str | Path) -> None:
+    Path(path).write_text(bundle_to_json(bundle))
+
+
+def load_bundle(path: str | Path) -> PlanBundle:
+    return bundle_from_json(Path(path).read_text())
+
+
+# ---------------------------------------------------------------- manifest
+
+MANIFEST_NAME = "manifest.json"
+
+
+@contextlib.contextmanager
+def _locked(lock_path: Path):
+    """Advisory exclusive lock (flock) held for a manifest index update.
+    Degrades to unlocked on platforms/filesystems without flock — the
+    rename below is still atomic, only lost-update protection is lost."""
+    try:
+        import fcntl
+    except ImportError:
+        yield
+        return
+    with open(lock_path, "a+") as fh:
+        try:
+            fcntl.flock(fh, fcntl.LOCK_EX)
+        except OSError:
+            yield
+            return
+        try:
+            yield
+        finally:
+            fcntl.flock(fh, fcntl.LOCK_UN)
+
+
+class BundleManifest:
+    """A directory of content-addressed bundle files + a bucket index.
+
+    Layout::
+
+        <dir>/manifest.json            # {"format_version", "buckets": {...}}
+        <dir>/bundle-<sha16>.json      # canonical PlanBundle documents
+
+    ``buckets`` maps :func:`bucket_key` strings to
+    ``{"file", "fingerprint", "total_size", "created_unix", "command"}``.
+    Timestamps and the compile command live here (mutable index), never in
+    the bundle payload (immutable, content-addressed).
+    """
+
+    def __init__(self, directory: str | Path):
+        self.dir = Path(directory)
+
+    @property
+    def manifest_path(self) -> Path:
+        return self.dir / MANIFEST_NAME
+
+    def _read_index(self) -> dict:
+        try:
+            obj = json.loads(self.manifest_path.read_text())
+        except (FileNotFoundError, json.JSONDecodeError):
+            return {"format_version": BUNDLE_FORMAT_VERSION, "buckets": {}}
+        if obj.get("format_version") != BUNDLE_FORMAT_VERSION:
+            raise ValueError(
+                f"unsupported manifest format version "
+                f"{obj.get('format_version')!r} in {self.manifest_path}"
+            )
+        return obj
+
+    def buckets(self) -> dict[str, dict]:
+        return self._read_index()["buckets"]
+
+    def publish(
+        self, key: str, bundle: PlanBundle, *, command: str | None = None
+    ) -> Path:
+        """Write ``bundle`` content-addressed and point ``key`` at it.
+        Recompiles of an unchanged graph rewrite the same file. The index
+        read-modify-write is serialized through an advisory file lock so
+        concurrent compiles into one manifest (fleet sweeps, parallel
+        ``serve --compile-first``) cannot drop each other's buckets, then
+        lands via an atomic same-directory rename."""
+        self.dir.mkdir(parents=True, exist_ok=True)
+        text = bundle_to_json(bundle)
+        sha = hashlib.sha256(text.encode()).hexdigest()
+        path = self.dir / f"bundle-{sha[:16]}.json"
+        if not path.exists():
+            path.write_text(text)
+        with _locked(self.dir / ".manifest.lock"):
+            index = self._read_index()
+            index["buckets"][key] = {
+                "file": path.name,
+                "fingerprint": bundle.fingerprint,
+                "total_size": bundle.plan.total_size,
+                "strategy": bundle.plan.strategy,
+                "created_unix": time.time(),
+                "command": command,
+            }
+            tmp = self.manifest_path.with_suffix(f".tmp{os.getpid()}")
+            tmp.write_text(json.dumps(index, sort_keys=True, indent=1))
+            tmp.replace(self.manifest_path)
+        return path
+
+    def lookup(self, key: str) -> PlanBundle | None:
+        entry = self.buckets().get(key)
+        if entry is None:
+            return None
+        return load_bundle(self.dir / entry["file"])
+
+
+def resolve_bundle(
+    source: "PlanBundle | str | Path",
+    cfg: "ArchConfig",
+    *,
+    n_slots: int,
+    max_len: int,
+) -> PlanBundle:
+    """Accept what a serving caller naturally has: a loaded bundle, a path
+    to one bundle file, or a manifest directory (looked up by bucket key).
+    Raises ``FileNotFoundError``/``ValueError`` on missing or unreadable
+    sources; fingerprint verification is the caller's job (the engine
+    checks and falls back)."""
+    if isinstance(source, PlanBundle):
+        return source
+    path = Path(source)
+    if path.is_dir():
+        key = bucket_key(cfg, n_slots=n_slots, max_len=max_len)
+        bundle = BundleManifest(path).lookup(key)
+        if bundle is None:
+            raise FileNotFoundError(
+                f"no bundle for bucket {key!r} in manifest {path}"
+            )
+        return bundle
+    return load_bundle(path)

@@ -15,8 +15,9 @@ The model here is deliberately conservative:
   consumer lies inside the run — anything observable outside the fused
   kernel is still planned;
 * the internalized bytes of a group must fit ``local_budget`` (the MAFAT
-  local-memory constraint; default 16 MiB ≈ one TPU core's VMEM), and a
-  group fuses at most ``max_group_ops`` ops;
+  local-memory constraint; the default comes from the TPU VMEM model in
+  ``kernels/vmem_plan`` — per-core VMEM minus the pipeline reserve the
+  kernels keep resident), and a group fuses at most ``max_group_ops`` ops;
 * a candidate partition is kept ONLY if re-planning the fused graph (via
   the content-addressed plan cache) strictly shrinks the arena, so the
   result is never worse than the unfused baseline.
@@ -39,7 +40,27 @@ from repro.core.records import DEFAULT_ALIGNMENT, align
 if TYPE_CHECKING:
     from repro.core.planner import MemoryPlan
 
-DEFAULT_LOCAL_BUDGET = 16 * 2**20  # bytes of kernel-local scratch
+# Fallback scratch budget when the kernel layer is unavailable (stripped
+# install, missing pallas deps): one whole v5e core's VMEM.
+_FALLBACK_LOCAL_BUDGET = 16 * 2**20
+
+
+def default_local_budget() -> int:
+    """Kernel-local scratch budget for fusion legality, derived from the
+    TPU VMEM model in ``kernels/vmem_plan`` (total VMEM minus the pipeline
+    reserve the kernels themselves keep resident). Imported lazily so the
+    planner core stays usable without the kernels layer."""
+    try:
+        from repro.kernels.vmem_plan import fusion_scratch_budget
+    except Exception:
+        return _FALLBACK_LOCAL_BUDGET
+    return fusion_scratch_budget()
+
+
+# import-time snapshot for callers that want a number to display; the
+# authoritative value is default_local_budget(), which fusion_search
+# resolves at CALL time (so VMEM-model adjustments are picked up)
+DEFAULT_LOCAL_BUDGET = default_local_budget()
 
 
 def _consumers(graph: Graph) -> dict[int, set[int]]:
@@ -166,7 +187,7 @@ def fusion_search(
     mode: str = "offsets",
     strategy: str = "auto",
     max_group_ops: int = 4,
-    local_budget: int = DEFAULT_LOCAL_BUDGET,
+    local_budget: int | None = None,
     cache: "plan_io.PlanCache | None" = None,
     max_rounds: int | None = None,
     alignment: int = DEFAULT_ALIGNMENT,
@@ -183,6 +204,8 @@ def fusion_search(
     from repro.core.planner import plan_records
 
     wall0 = time.perf_counter()
+    if local_budget is None:
+        local_budget = default_local_budget()
     graph.validate()  # once; fused candidates are valid by construction
     cache = cache if cache is not None else plan_io.PlanCache()
     hits0, misses0 = cache.hits, cache.misses

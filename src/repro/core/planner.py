@@ -34,6 +34,11 @@ from repro.core.shared_objects import SharedObjectsAssignment
 
 Mode = Literal["shared_objects", "offsets"]
 
+# Instrumentation: total plan_records entries this process (cache hits
+# included — a bundle-served engine must not even consult the planner).
+# Tests snapshot it around engine construction.
+PLAN_CALLS = 0
+
 SHARED_OBJECT_STRATEGIES: dict[
     str, Callable[[Sequence[TensorUsageRecord]], SharedObjectsAssignment]
 ] = {
@@ -127,6 +132,8 @@ def plan_records(
     cache: plan_io.PlanCache | None = None,
     use_cache: bool = True,
 ) -> MemoryPlan:
+    global PLAN_CALLS
+    PLAN_CALLS += 1
     records = list(records)
     t0 = time.perf_counter()
     key: str | None = None

@@ -19,6 +19,22 @@ from repro.core.records import TensorUsageRecord
 
 VMEM_BYTES = 16 * 2**20  # v5e per-core VMEM
 
+# What a FUSED kernel's internalized tensors may occupy. A fused kernel is
+# not alone in VMEM: the compiler keeps pipeline state resident — the
+# double-buffered operand tiles and fp32 accumulators this module plans
+# (see ``plan_flash_decode_vmem``: the largest paper-shape step plans well
+# under 4 MiB). Reserving that headroom makes fusion legality reflect the
+# actual TPU VMEM model instead of pretending the whole core is scratch.
+VMEM_PIPELINE_RESERVE_BYTES = 4 * 2**20
+
+
+def fusion_scratch_budget(
+    vmem_bytes: int = VMEM_BYTES,
+    reserve_bytes: int = VMEM_PIPELINE_RESERVE_BYTES,
+) -> int:
+    """Kernel-local scratch available to fusion (``core/fusion_search``)."""
+    return max(vmem_bytes - reserve_bytes, 0)
+
 
 @dataclasses.dataclass
 class KernelVmemPlan:

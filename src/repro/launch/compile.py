@@ -1,0 +1,295 @@
+"""AOT plan compiler: decode graph -> searched memory plan -> bundle.
+
+The offline half of the compile→artifact→serve pipeline. For one
+``(arch, n_slots, max_len)`` serving bucket this entrypoint:
+
+1. traces the decode step to its liveness graph **at the shape level**
+   (``jax.eval_shape`` parameter/cache pytrees — no weights are ever
+   materialized, so compiling a plan for a 400B-parameter config costs
+   megabytes, not terabytes);
+2. plans it with the paper's Offset Calculation portfolio, and with
+   ``--search`` also runs the memory-aware topological-order annealing and
+   the MAFAT-style fusion search (``core/order_search`` /
+   ``core/fusion_search``) against the cached planner — this is the
+   ROADMAP item "retarget search at transformer decode graphs": the outer
+   search finally points at graphs with residual-stream slack instead of
+   the paper's breadth-pinned convnets;
+3. validates the winning plan with the independent first-principles
+   checker (``core/validate.check_offsets``);
+4. publishes a versioned, fingerprinted :class:`~repro.core.artifact.PlanBundle`
+   into a content-addressed manifest directory that
+   ``InferenceEngine(plan_bundle=...)`` / ``launch/serve.py --plan-bundle``
+   serve from without tracing or planning anything.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.compile --arch qwen3-0.6b \
+        --search [--full] [--slots 4] [--max-len 128] [--out plan_artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import shlex
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, ArchConfig, get_config, get_reduced
+from repro.core.artifact import (
+    BundleManifest,
+    PlanBundle,
+    bucket_key,
+    decode_fingerprint,
+    graph_fingerprint,
+)
+from repro.core.fusion_search import FusionSearchResult, fusion_search
+from repro.core.graph import Graph
+from repro.core.order_search import OrderSearchResult, search_order
+from repro.core.plan_io import PlanCache
+from repro.core.planner import MemoryPlan, plan_graph
+from repro.core.validate import check_offsets
+from repro.models.api import Model
+from repro.trace.jaxpr_liveness import trace_graph
+
+DEFAULT_BUNDLE_DIR = "plan_artifacts"
+
+
+@dataclasses.dataclass
+class CompileResult:
+    bundle: PlanBundle
+    graph: Graph
+    greedy_plan: MemoryPlan
+    order_result: OrderSearchResult | None
+    fusion_result: FusionSearchResult | None
+    wall_s: float
+
+    @property
+    def searched_total(self) -> int:
+        return self.bundle.plan.total_size
+
+    def summary(self) -> str:
+        lines = [self.bundle.summary()]
+        if self.order_result is not None and self.fusion_result is not None:
+            evals = (
+                self.order_result.evaluations + self.fusion_result.evaluations
+            )
+            hits = (
+                self.order_result.cache_hits + self.fusion_result.cache_hits
+            )
+            lines.append(
+                f"search: {evals} plan calls "
+                f"({hits / max(evals, 1):.0%} cache hits), "
+                f"order {self.order_result.plan.total_size / 2**20:.3f} MiB, "
+                f"fused {self.fusion_result.plan.total_size / 2**20:.3f} MiB "
+                f"({self.fusion_result.n_fused_groups} groups)"
+            )
+        lines.append(f"compile wall: {self.wall_s:.2f}s")
+        return "\n".join(lines)
+
+
+def _decode_specs(cfg: ArchConfig, *, n_slots: int, max_len: int):
+    """(decode_fn, shape-level args) for the decode step — no weights are
+    ever materialized, only avals."""
+    if cfg.family == "audio":
+        raise NotImplementedError("compile targets decoder-only archs")
+    model = Model.for_config(cfg)
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda: model.init(key))
+    caches = jax.eval_shape(lambda: model.init_cache(n_slots, max_len))
+    tok0 = jax.ShapeDtypeStruct((n_slots, 1), jnp.int32)
+    pos0 = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
+    act0 = jax.ShapeDtypeStruct((n_slots,), jnp.bool_)
+
+    def decode(p, t, c, pos, act):
+        return model.decode_step(p, t, c, pos, active=act)
+
+    return decode, (params, tok0, caches, pos0, act0)
+
+
+def trace_decode_graph(
+    cfg: ArchConfig, *, n_slots: int, max_len: int
+) -> Graph:
+    """Shape-level trace of the decode step — identical jaxpr (hence
+    identical graph and plan) to what the engine would trace with real
+    weights, since ``make_jaxpr`` only consumes avals."""
+    decode, specs = _decode_specs(cfg, n_slots=n_slots, max_len=max_len)
+    return trace_graph(decode, *specs, name=f"{cfg.name}-decode")
+
+
+def _measure_xla_temp(
+    cfg: ArchConfig, *, n_slots: int, max_len: int
+) -> int | None:
+    """AOT-compile the decode step (shape-level) and read XLA's temp
+    allocation, so bundle-served engines keep the planned-vs-XLA
+    validation line without compiling anything at serving time."""
+    decode, specs = _decode_specs(cfg, n_slots=n_slots, max_len=max_len)
+    try:
+        compiled = jax.jit(decode).lower(*specs).compile()
+        ma = compiled.memory_analysis()
+        return int(getattr(ma, "temp_size_in_bytes", 0)) or None
+    except Exception:
+        return None
+
+
+def compile_decode_plan(
+    cfg: ArchConfig,
+    *,
+    n_slots: int,
+    max_len: int,
+    strategy: str = "auto",
+    search: bool = False,
+    search_iters: int = 300,
+    fusion_rounds: int = 40,
+    cache: PlanCache | None = None,
+    measure_xla: bool = True,
+) -> CompileResult:
+    """Trace → (search) → plan → validate → bundle, all in memory."""
+    wall0 = time.perf_counter()
+    graph = trace_decode_graph(cfg, n_slots=n_slots, max_len=max_len)
+    greedy_plan = plan_graph(graph, mode="offsets", strategy=strategy)
+    check_offsets(greedy_plan.records, greedy_plan)
+
+    best_plan = greedy_plan
+    order: list[int] | None = None
+    groups: list[list[int]] | None = None
+    order_res: OrderSearchResult | None = None
+    fusion_res: FusionSearchResult | None = None
+    if search:
+        search_cache = cache if cache is not None else PlanCache()
+        order_res = search_order(
+            graph, iters=search_iters, seed=0, strategy=strategy,
+            cache=search_cache,
+        )
+        fusion_res = fusion_search(
+            graph, strategy=strategy, max_rounds=fusion_rounds,
+            cache=search_cache,
+        )
+        # both searches honor the never-worse contract; take the smaller
+        if fusion_res.plan.total_size < best_plan.total_size and (
+            fusion_res.plan.total_size <= order_res.plan.total_size
+        ):
+            best_plan = fusion_res.plan
+            groups = [list(g) for g in fusion_res.groups]
+        elif order_res.plan.total_size < best_plan.total_size:
+            best_plan = order_res.plan
+            order = list(order_res.order)
+        if best_plan is not greedy_plan:
+            check_offsets(best_plan.records, best_plan)
+
+    provenance: dict = {
+        "tool": "repro.launch.compile",
+        "strategy_requested": strategy,
+        "search": search,
+        "graph_ops": len(graph.ops),
+        "records": len(best_plan.records),
+        "greedy_total_bytes": greedy_plan.total_size,
+        "searched_total_bytes": (
+            min(order_res.plan.total_size, fusion_res.plan.total_size)
+            if search else None
+        ),
+        "xla_temp_bytes": (
+            _measure_xla_temp(cfg, n_slots=n_slots, max_len=max_len)
+            if measure_xla else None
+        ),
+    }
+    if search:
+        provenance["search_stats"] = {
+            "order_total_bytes": order_res.plan.total_size,
+            "fused_total_bytes": fusion_res.plan.total_size,
+            "fused_groups": fusion_res.n_fused_groups,
+            "internalized_bytes": fusion_res.internalized_bytes,
+            "evaluations": order_res.evaluations + fusion_res.evaluations,
+            "order_iters": search_iters,
+            "fusion_rounds": fusion_rounds,
+        }
+    bundle = PlanBundle(
+        fingerprint=decode_fingerprint(cfg, n_slots=n_slots, max_len=max_len),
+        graph_fingerprint=graph_fingerprint(graph),
+        arch=cfg.name,
+        n_slots=n_slots,
+        max_len=max_len,
+        dtype=cfg.dtype,
+        plan=best_plan,
+        order=order,
+        fusion_groups=groups,
+        provenance=provenance,
+    )
+    return CompileResult(
+        bundle=bundle,
+        graph=graph,
+        greedy_plan=greedy_plan,
+        order_result=order_res,
+        fusion_result=fusion_res,
+        wall_s=time.perf_counter() - wall0,
+    )
+
+
+def compile_and_publish(
+    cfg: ArchConfig,
+    out_dir: str,
+    *,
+    n_slots: int,
+    max_len: int,
+    command: str | None = None,
+    **kwargs,
+) -> CompileResult:
+    res = compile_decode_plan(cfg, n_slots=n_slots, max_len=max_len, **kwargs)
+    BundleManifest(out_dir).publish(
+        bucket_key(cfg, n_slots=n_slots, max_len=max_len),
+        res.bundle,
+        command=command,
+    )
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="compile a decode-graph memory plan into a serving bundle"
+    )
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--full", action="store_true",
+                    help="compile the full config (default: reduced)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--strategy", default="auto")
+    ap.add_argument("--search", action="store_true",
+                    help="run the order/fusion search on the decode graph")
+    ap.add_argument("--iters", type=int, default=300,
+                    help="order-search annealing iterations")
+    ap.add_argument("--fusion-rounds", type=int, default=40)
+    ap.add_argument("--out", default=DEFAULT_BUNDLE_DIR,
+                    help="bundle manifest directory")
+    ap.add_argument("--json", action="store_true",
+                    help="emit a machine-readable summary line")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_reduced(args.arch)
+    res = compile_and_publish(
+        cfg, args.out,
+        n_slots=args.slots, max_len=args.max_len,
+        strategy=args.strategy, search=args.search,
+        search_iters=args.iters, fusion_rounds=args.fusion_rounds,
+        command=shlex.join(sys.argv),
+    )
+    print(res.summary())
+    print(f"published to {args.out}/ "
+          f"(bucket {bucket_key(cfg, n_slots=args.slots, max_len=args.max_len)})")
+    if args.json:
+        print(json.dumps({
+            "arch": args.arch,
+            "full": args.full,
+            "n_slots": args.slots,
+            "max_len": args.max_len,
+            "greedy_total_bytes": res.greedy_plan.total_size,
+            "bundle_total_bytes": res.bundle.plan.total_size,
+            "searched": args.search,
+            "wall_s": round(res.wall_s, 3),
+        }))
+
+
+if __name__ == "__main__":
+    main()

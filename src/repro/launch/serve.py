@@ -1,9 +1,15 @@
 """Serving driver: batched-request inference with the planned engine.
 
 End-to-end example (deliverable (b)): build a reduced model, start the
-InferenceEngine (which plans its activation memory with the paper's
-Offset Calculation and reports it vs XLA), submit a batch of requests,
-and print throughput + the memory report.
+InferenceEngine — from a precompiled plan artifact when ``--plan-bundle``
+points at a bundle file or manifest directory (``launch/compile.py``
+output), otherwise planning at construction — submit a batch of requests,
+and print cold-start time, throughput and the memory report.
+
+``--compile-first`` runs the AOT compiler into the bundle directory before
+starting the engine (the one-command demo of compile→artifact→serve);
+``--compare-cold-start`` additionally constructs a plan-at-construction
+engine to print both cold-start times side by side.
 """
 
 from __future__ import annotations
@@ -19,7 +25,8 @@ from repro.models.api import Model
 from repro.runtime.engine import InferenceEngine
 
 
-def main() -> None:
+def run(argv: list[str] | None = None) -> dict:
+    """Parse args, serve, return a stats dict (tests call this directly)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b", choices=ARCH_IDS)
     ap.add_argument("--requests", type=int, default=8)
@@ -28,19 +35,57 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--full", action="store_true")
-    args = ap.parse_args()
+    ap.add_argument("--plan-bundle", default=None,
+                    help="precompiled plan artifact: a bundle file or a "
+                         "manifest directory from launch/compile.py")
+    ap.add_argument("--compile-first", action="store_true",
+                    help="run the AOT compiler into --plan-bundle (default "
+                         "plan_artifacts/) before starting the engine")
+    ap.add_argument("--compare-cold-start", action="store_true",
+                    help="also time a plan-at-construction engine so the "
+                         "artifact's cold-start win is printed side by side")
+    args = ap.parse_args(argv)
 
     cfg = get_config(args.arch) if args.full else get_reduced(args.arch)
     if cfg.family == "audio":
         raise SystemExit("serve drives decoder-only archs; pick another --arch")
+
+    bundle_dir = args.plan_bundle
+    if args.compile_first:
+        from repro.launch.compile import DEFAULT_BUNDLE_DIR, compile_and_publish
+
+        bundle_dir = bundle_dir or DEFAULT_BUNDLE_DIR
+        t0 = time.perf_counter()
+        res = compile_and_publish(
+            cfg, bundle_dir, n_slots=args.slots, max_len=args.max_len,
+            command="launch/serve.py --compile-first",
+        )
+        print(f"compiled plan bundle in {time.perf_counter() - t0:.2f}s: "
+              f"{res.bundle.summary()}")
+
     model = Model.for_config(cfg)
     print(f"initializing {cfg.name} ({cfg.n_layers}L d={cfg.d_model})...")
     params = model.init(jax.random.PRNGKey(0))
+    t0 = time.perf_counter()
     engine = InferenceEngine(
-        cfg, params, n_slots=args.slots, max_len=args.max_len
+        cfg, params, n_slots=args.slots, max_len=args.max_len,
+        plan_bundle=bundle_dir,
     )
+    cold_start_s = time.perf_counter() - t0
+    report = engine.memory_report
+    print(f"--- engine cold start: {cold_start_s:.3f}s "
+          f"(plan source: {report.plan_source}) ---")
+    cold_start_noartifact_s = None
+    if args.compare_cold_start and report.plan_source == "bundle":
+        t0 = time.perf_counter()
+        InferenceEngine(cfg, params, n_slots=args.slots, max_len=args.max_len)
+        cold_start_noartifact_s = time.perf_counter() - t0
+        print(f"--- cold start without the artifact: "
+              f"{cold_start_noartifact_s:.3f}s "
+              f"({cold_start_noartifact_s / max(cold_start_s, 1e-9):.1f}x "
+              f"slower) ---")
     print("--- memory report (the paper's planner on the decode step) ---")
-    print(engine.memory_report.summary())
+    print(report.summary())
 
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
@@ -59,6 +104,22 @@ def main() -> None:
               f"tokens {r.tokens[:8]}...")
     # slot-reuse audit: the engine's §4-style interval log
     print(f"slot log (slot, admitted, finished, rid): {engine.slot_log}")
+    return {
+        "requests": len(done),
+        "tokens": toks,
+        "tokens_per_request": {r.request_id: list(r.tokens) for r in done},
+        "waves": engine._wave,
+        "slot_log": list(engine.slot_log),
+        "cold_start_s": cold_start_s,
+        "cold_start_noartifact_s": cold_start_noartifact_s,
+        "plan_source": report.plan_source,
+        "bundle_warning": report.bundle_warning,
+        "plan_total_bytes": report.activation_plan.total_size,
+    }
+
+
+def main() -> None:
+    run()
 
 
 if __name__ == "__main__":

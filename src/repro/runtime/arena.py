@@ -1,23 +1,73 @@
 """Flat memory arena materializing an Offset Calculation plan (paper §5).
 
-One ``bytearray``-backed numpy buffer of ``plan.total_size`` bytes; every
+One ``bytearray``-backed numpy buffer of ``total_size`` bytes; every
 intermediate tensor is a zero-copy view at its planned offset. This is the
 TFLite-style deployment of the paper's result: allocate once, reuse across
 the whole inference — and across inferences.
+
+The arena is deliberately decoupled from the planner: it consumes an
+:class:`ArenaLayout` (offsets + per-tensor slot sizes + total), which can
+come from a freshly computed :class:`~repro.core.planner.MemoryPlan` *or*
+straight from a precompiled :class:`~repro.core.artifact.PlanBundle`'s
+stored offsets — the serving path never needs planner objects to
+materialize its memory.
 """
 
 from __future__ import annotations
 
+import dataclasses
+from typing import TYPE_CHECKING, Mapping
+
 import numpy as np
 
-from repro.core.planner import MemoryPlan
+if TYPE_CHECKING:
+    from repro.core.artifact import PlanBundle
+    from repro.core.planner import MemoryPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaLayout:
+    """Everything an arena needs: where each tensor lives and how big the
+    buffer is. ``sizes`` are the *planned slot* sizes (alignment-rounded)
+    used for bounds enforcement."""
+
+    total_size: int
+    offsets: Mapping[int, int]  # tensor_id -> byte offset
+    sizes: Mapping[int, int]  # tensor_id -> planned slot bytes
+
+    @staticmethod
+    def from_plan(plan: "MemoryPlan") -> "ArenaLayout":
+        return ArenaLayout(
+            total_size=plan.total_size,
+            offsets=dict(plan.offsets),
+            sizes={r.tensor_id: r.size for r in plan.records},
+        )
+
+    @staticmethod
+    def from_bundle(bundle: "PlanBundle") -> "ArenaLayout":
+        """Materialize straight from a plan artifact's stored offsets."""
+        return ArenaLayout.from_plan(bundle.plan)
+
+    def validate(self) -> None:
+        """Every planned slot must lie inside the buffer — a corrupt or
+        hand-edited artifact fails here, before any bytes are aliased."""
+        for tid, off in self.offsets.items():
+            size = self.sizes.get(tid, 0)
+            if off < 0 or off + size > self.total_size:
+                raise ValueError(
+                    f"tensor {tid}: slot [{off}, {off + size}) outside "
+                    f"arena of {self.total_size} B"
+                )
 
 
 class Arena:
-    def __init__(self, plan: MemoryPlan):
-        self.plan = plan
-        self.buf = np.zeros(max(plan.total_size, 1), dtype=np.uint8)
-        self._sizes = {r.tensor_id: r.size for r in plan.records}
+    def __init__(self, layout: "ArenaLayout | MemoryPlan"):
+        if not isinstance(layout, ArenaLayout):
+            layout = ArenaLayout.from_plan(layout)
+        layout.validate()
+        self.layout = layout
+        self.buf = np.zeros(max(layout.total_size, 1), dtype=np.uint8)
+        self._sizes = layout.sizes
 
     @property
     def nbytes(self) -> int:
@@ -26,7 +76,7 @@ class Arena:
     def store(self, tensor_id: int, value: np.ndarray) -> np.ndarray:
         """Copy ``value``'s bytes to the tensor's planned slot; return a
         view aliasing arena memory (C-contiguous, same shape/dtype)."""
-        off = self.plan.offsets[tensor_id]
+        off = self.layout.offsets[tensor_id]
         raw = np.ascontiguousarray(value)
         nbytes = raw.nbytes
         if nbytes > self._sizes[tensor_id]:
@@ -39,7 +89,7 @@ class Arena:
         return self.view(tensor_id, raw.shape, raw.dtype)
 
     def view(self, tensor_id: int, shape, dtype) -> np.ndarray:
-        off = self.plan.offsets[tensor_id]
+        off = self.layout.offsets[tensor_id]
         nbytes = int(np.prod(shape)) * np.dtype(dtype).itemsize
         # a too-large view would silently alias the NEXT tensor's planned
         # slot — enforce both the per-tensor slot size and the arena end

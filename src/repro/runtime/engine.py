@@ -3,16 +3,22 @@
 This is where the paper's contribution becomes a first-class framework
 feature. At engine construction we:
 
-1. trace the decode step to a jaxpr, extract tensor usage records
-   (``trace/jaxpr_liveness``), and produce the activation ``MemoryPlan``
-   (paper §5, Greedy-by-Size offsets with auto fallback) — reported in
-   ``engine.memory_report`` and validated against XLA's own temp
-   allocation;
-2. plan the CROSS-STEP state (per-slot KV caches + decode buffers) as a
+1. obtain the activation ``MemoryPlan`` for the decode step — either
+   served from a precompiled :class:`~repro.core.artifact.PlanBundle`
+   (``plan_bundle=``: the ahead-of-time path — no jaxpr trace, no planner
+   call; the bundle's config-level fingerprint is verified against this
+   engine's bucket and mismatches fall back to planning with a one-line
+   warning in the report), or by tracing the decode step to a jaxpr
+   (``trace/jaxpr_liveness``) and planning it (paper §5, Greedy-by-Size
+   offsets with auto fallback) — reported in ``engine.memory_report`` and
+   validated against XLA's own temp allocation;
+2. materialize the activation arena straight from the plan's offsets
+   (``engine.activation_arena`` — allocate once, serve forever);
+3. plan the CROSS-STEP state (per-slot KV caches + decode buffers) as a
    Shared-Objects instance where ``op index == decode wave`` — slots are
    the shared objects, requests are the tensors (paper §4 applied above
    the XLA level, where XLA cannot help);
-3. run continuous batching: fixed ``n_slots``, admit from queue on free,
+4. run continuous batching: fixed ``n_slots``, admit from queue on free,
    step all active slots each wave, retire on EOS/max_len.
 
 The decode step itself is jit-compiled once; the engine never reallocates
@@ -23,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from pathlib import Path
 from typing import Any, Callable
 
 import jax
@@ -30,10 +37,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.artifact import PlanBundle, decode_fingerprint, resolve_bundle
 from repro.core.graph import Graph
 from repro.core.planner import MemoryPlan, plan_graph
 from repro.models import transformer
 from repro.models.api import Model
+from repro.runtime.arena import Arena, ArenaLayout
 from repro.trace.jaxpr_liveness import trace_graph
 
 
@@ -57,10 +66,20 @@ class MemoryReport:
     # the activation plan came from the content-addressed plan cache
     # (repeat engine construction over an unchanged decode graph)
     plan_cache_hit: bool = False
+    # where the plan came from: "bundle" (precompiled artifact, zero
+    # trace/plan work), "cache" (plan cache hit), or "planned"
+    plan_source: str = "planned"
+    # one-line reason when a requested bundle could not be used and the
+    # engine fell back to plan-at-construction
+    bundle_warning: str | None = None
 
     def summary(self) -> str:
         lines = [self.activation_plan.summary()]
-        if self.plan_cache_hit:
+        if self.bundle_warning:
+            lines.append(f"WARNING: {self.bundle_warning}")
+        if self.plan_source == "bundle":
+            lines.append("activation plan served from a precompiled bundle")
+        elif self.plan_cache_hit:
             lines.append("activation plan served from the plan cache")
         if self.xla_temp_bytes is not None:
             lines.append(
@@ -86,6 +105,8 @@ class InferenceEngine:
         greedy: bool = True,
         sample_seed: int | None = 0,
         activation_graph: Graph | None = None,
+        plan_bundle: PlanBundle | str | Path | None = None,
+        verify_bundle: bool = False,
     ):
         if cfg.family == "audio":
             raise NotImplementedError("engine drives decoder-only archs")
@@ -110,28 +131,73 @@ class InferenceEngine:
         )
 
         # --- the paper's planner on the decode step ---------------------
+        # Ahead-of-time path first: a precompiled PlanBundle
+        # (launch/compile.py) already carries the plan for this exact
+        # (config, n_slots, max_len) bucket. Verifying its cheap
+        # config-level fingerprint costs microseconds; on a match the
+        # engine performs NO jaxpr trace, NO planner call, and skips the
+        # XLA memory-analysis compile — the cold-start win the artifact
+        # pipeline exists for. Any mismatch or load failure falls back to
+        # today's plan-at-construction path with a one-line warning.
+        bundle: PlanBundle | None = None
+        bundle_warning: str | None = None
+        if plan_bundle is not None:
+            bundle, bundle_warning = self._load_bundle(plan_bundle)
         tok0 = jnp.zeros((n_slots, 1), jnp.int32)
         pos0 = jnp.zeros((n_slots,), jnp.int32)
         act0 = jnp.ones((n_slots,), bool)
-        # a pre-searched graph (core/order_search, core/fusion_search) can
-        # be planned directly instead of tracing the default-order step
-        graph = activation_graph if activation_graph is not None else trace_graph(
-            lambda p, t, c, pos, act: self.model.decode_step(
-                p, t, c, pos, active=act
-            ),
-            params, tok0, self.caches, pos0, act0, name=f"{cfg.name}-decode",
-        )
-        plan = plan_graph(graph, mode="offsets", strategy=plan_strategy)
-        xla_temp = None
-        try:
-            compiled = (
-                self._decode.lower(params, tok0, self.caches, pos0, act0)
-                .compile()
+        if bundle is not None and verify_bundle:
+            # trace-backed verification: the config fingerprint cannot see
+            # model-code changes (only a PIPELINE_REVISION bump can), so a
+            # paranoid caller trades the zero-trace cold start for a
+            # structural check of the stored graph_fingerprint
+            from repro.core.artifact import graph_fingerprint
+
+            fresh = graph_fingerprint(trace_graph(
+                lambda p, t, c, pos, act: self.model.decode_step(
+                    p, t, c, pos, active=act
+                ),
+                params, tok0, self.caches, pos0, act0,
+                name=f"{cfg.name}-decode",
+            ))
+            if bundle.graph_fingerprint != fresh:
+                bundle_warning = (
+                    f"plan bundle graph fingerprint mismatch (bundle "
+                    f"{str(bundle.graph_fingerprint)[:12]}, traced "
+                    f"{fresh[:12]} — model code changed since compile?); "
+                    f"planned at construction instead"
+                )
+                bundle = None
+        xla_temp: int | None = None
+        if bundle is not None:
+            plan = bundle.plan
+            plan_source = "bundle"
+            xla_temp = bundle.provenance.get("xla_temp_bytes")
+        else:
+            # a pre-searched graph (core/order_search, core/fusion_search)
+            # can be planned directly instead of tracing the default-order
+            # step
+            graph = activation_graph if activation_graph is not None else trace_graph(
+                lambda p, t, c, pos, act: self.model.decode_step(
+                    p, t, c, pos, active=act
+                ),
+                params, tok0, self.caches, pos0, act0, name=f"{cfg.name}-decode",
             )
-            ma = compiled.memory_analysis()
-            xla_temp = int(getattr(ma, "temp_size_in_bytes", 0)) or None
-        except Exception:
-            pass
+            plan = plan_graph(graph, mode="offsets", strategy=plan_strategy)
+            plan_source = "cache" if plan.cache_hit else "planned"
+            try:
+                compiled = (
+                    self._decode.lower(params, tok0, self.caches, pos0, act0)
+                    .compile()
+                )
+                ma = compiled.memory_analysis()
+                xla_temp = int(getattr(ma, "temp_size_in_bytes", 0)) or None
+            except Exception:
+                pass
+        self.plan_bundle = bundle
+        # allocate-once deployment: the arena comes straight from the
+        # stored offsets (no planner objects needed on the bundle path)
+        self.activation_arena = Arena(ArenaLayout.from_plan(plan))
         cache_bytes = sum(
             np.prod(x.shape) * x.dtype.itemsize
             for x in jax.tree_util.tree_leaves(self.caches)
@@ -142,6 +208,8 @@ class InferenceEngine:
             cache_bytes_per_slot=int(cache_bytes // n_slots),
             n_slots=n_slots,
             plan_cache_hit=plan.cache_hit,
+            plan_source=plan_source,
+            bundle_warning=bundle_warning,
         )
 
         # serving state — per-slot positions (continuous batching: every
@@ -155,6 +223,33 @@ class InferenceEngine:
         # (slot, first_wave, last_wave, request_id)
         self.slot_log: list[tuple[int, int, int, int]] = []
         self._next_rid = 0
+
+    def _load_bundle(
+        self, source: PlanBundle | str | Path
+    ) -> tuple[PlanBundle | None, str | None]:
+        """Resolve + fingerprint-check a plan bundle. Returns
+        ``(bundle, None)`` on success, ``(None, warning)`` on any failure —
+        a bad artifact degrades to plan-at-construction, never crashes
+        serving (hence the deliberately broad except: whatever a corrupt
+        or adversarially malformed document raises, serving proceeds)."""
+        try:
+            bundle = resolve_bundle(
+                source, self.cfg, n_slots=self.n_slots, max_len=self.max_len
+            )
+        except Exception as e:
+            return None, (
+                f"plan bundle unusable ({e}); planned at construction instead"
+            )
+        expect = decode_fingerprint(
+            self.cfg, n_slots=self.n_slots, max_len=self.max_len
+        )
+        if bundle.fingerprint != expect:
+            return None, (
+                f"plan bundle fingerprint mismatch (bundle "
+                f"{str(bundle.fingerprint)[:12]}, engine {expect[:12]}); "
+                f"planned at construction instead"
+            )
+        return bundle, None
 
     # ------------------------------------------------------------ admin
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:

@@ -22,7 +22,7 @@ from jax.extend.core import Literal
 
 from repro.core.graph import Graph
 from repro.core.planner import MemoryPlan, plan_graph
-from repro.runtime.arena import Arena
+from repro.runtime.arena import Arena, ArenaLayout
 from repro.trace.jaxpr_liveness import _INLINE, _sub_closed_jaxpr, graph_from_jaxpr
 
 
@@ -46,16 +46,37 @@ class ArenaExecutor:
         *example_args,
         strategy: str = "auto",
         alignment: int = 64,
+        plan: MemoryPlan | None = None,
     ):
         self.closed = jax.make_jaxpr(fn)(*example_args)
         self.graph: Graph = graph_from_jaxpr(
             self.closed, name=getattr(fn, "__name__", "fn"),
             inline_nested=True, expand_scan=False,
         )
-        self.plan: MemoryPlan = plan_graph(
-            self.graph, mode="offsets", strategy=strategy, alignment=alignment
-        )
-        self.arena = Arena(self.plan)
+        if plan is not None:
+            # a precompiled plan (e.g. out of a PlanBundle) skips the
+            # planner — but only if it covers exactly this graph's records;
+            # a stale artifact here would mean silent memory corruption
+            def canon(records):
+                return sorted(
+                    (r.tensor_id, r.first_op, r.last_op, r.size)
+                    for r in records
+                )
+
+            if canon(plan.records) != canon(
+                self.graph.usage_records(alignment)
+            ):
+                raise ValueError(
+                    "precomputed plan does not match this graph's usage "
+                    "records; re-run launch/compile.py"
+                )
+            self.plan = plan
+        else:
+            self.plan = plan_graph(
+                self.graph, mode="offsets", strategy=strategy,
+                alignment=alignment,
+            )
+        self.arena = Arena(ArenaLayout.from_plan(self.plan))
         self.stats = ExecutionStats(
             arena_bytes=self.plan.total_size,
             naive_peak_bytes=self.plan.naive_size,

@@ -28,6 +28,12 @@ from jax.extend.core import Literal
 
 from repro.core.graph import Graph, Op, TensorSpec
 
+# Instrumentation: total graph extractions this process (bumped by every
+# graph_from_jaxpr, which every trace_graph goes through). Tests snapshot
+# it around engine construction to prove the plan-bundle serving path
+# performs zero traces.
+TRACE_CALLS = 0
+
 _INLINE = {
     "pjit",
     "closed_call",
@@ -202,6 +208,8 @@ def graph_from_jaxpr(
 
     ``expand_scan`` models each ``lax.scan`` as ONE iteration of its body
     (buffers reused across iterations, as a layer-wise engine executes)."""
+    global TRACE_CALLS
+    TRACE_CALLS += 1
     jaxpr = closed_jaxpr.jaxpr
     b = _Builder(
         frozenset(_INLINE) if inline_nested else frozenset(),

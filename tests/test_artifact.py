@@ -1,0 +1,166 @@
+"""Plan-bundle artifact tests: serialization, fingerprints, manifest.
+
+The artifact layer is the contract between the offline compiler and every
+future serving process, so these tests pin the properties serving relies
+on: byte-determinism (content addressing must be stable across
+recompiles), version rejection (loaders never guess), fingerprint
+sensitivity (any graph-shaping change re-keys), and manifest dedup.
+"""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.configs.base import get_reduced
+from repro.core.artifact import (
+    BUNDLE_FORMAT_VERSION,
+    BundleManifest,
+    PlanBundle,
+    bucket_key,
+    bundle_from_json,
+    bundle_from_obj,
+    bundle_to_json,
+    bundle_to_obj,
+    decode_fingerprint,
+    graph_fingerprint,
+    load_bundle,
+    resolve_bundle,
+    save_bundle,
+)
+from repro.core.graph import GraphBuilder
+from repro.core.planner import plan_records
+
+
+def _small_graph(scale: int = 1):
+    b = GraphBuilder("tiny")
+    x = b.input((4 * scale, 4), "x")
+    h = b.op("matmul", [x], (4 * scale, 8))
+    g = b.op("gelu", [h], (4 * scale, 8))
+    out = b.op("proj", [g, h], (4 * scale, 2))
+    b.mark_output(out)
+    return b.build()
+
+
+def _bundle(cfg=None, n_slots=2, max_len=64, **overrides) -> PlanBundle:
+    cfg = cfg or get_reduced("qwen3-0.6b")
+    g = _small_graph()
+    plan = plan_records(
+        g.usage_records(), graph_name=g.name, use_cache=False
+    )
+    fields = dict(
+        fingerprint=decode_fingerprint(cfg, n_slots=n_slots, max_len=max_len),
+        graph_fingerprint=graph_fingerprint(g),
+        arch=cfg.name,
+        n_slots=n_slots,
+        max_len=max_len,
+        dtype=cfg.dtype,
+        plan=plan,
+        order=[0, 2, 1],
+        fusion_groups=[[0], [1, 2]],
+        provenance={"tool": "test", "greedy_total_bytes": plan.total_size},
+    )
+    fields.update(overrides)
+    return PlanBundle(**fields)
+
+
+def test_bundle_json_round_trip():
+    b = _bundle()
+    b2 = bundle_from_json(bundle_to_json(b))
+    assert bundle_to_obj(b2) == bundle_to_obj(b)
+    assert b2.order == [0, 2, 1]
+    assert b2.fusion_groups == [[0], [1, 2]]
+    assert b2.plan.total_size == b.plan.total_size
+    assert b2.plan.offsets == b.plan.offsets
+
+
+def test_bundle_encoding_is_byte_deterministic():
+    """Content addressing relies on it: the same compiled plan must encode
+    to the same bytes, regardless of planning wall time."""
+    b = _bundle()
+    slow = dataclasses.replace(b, plan=dataclasses.replace(b.plan, plan_wall_s=1.23))
+    assert bundle_to_json(b) == bundle_to_json(slow)
+    assert bundle_to_json(b) == bundle_to_json(bundle_from_json(bundle_to_json(b)))
+
+
+def test_bundle_rejects_unknown_version():
+    obj = bundle_to_obj(_bundle())
+    obj["format_version"] = BUNDLE_FORMAT_VERSION + 1
+    with pytest.raises(ValueError, match="format version"):
+        bundle_from_obj(obj)
+
+
+def test_decode_fingerprint_covers_graph_shaping_inputs():
+    cfg = get_reduced("qwen3-0.6b")
+    fp = decode_fingerprint(cfg, n_slots=2, max_len=64)
+    assert fp == decode_fingerprint(cfg, n_slots=2, max_len=64)
+    assert fp != decode_fingerprint(cfg, n_slots=4, max_len=64)
+    assert fp != decode_fingerprint(cfg, n_slots=2, max_len=128)
+    assert fp != decode_fingerprint(
+        dataclasses.replace(cfg, d_model=cfg.d_model * 2), n_slots=2, max_len=64
+    )
+    assert fp != decode_fingerprint(get_reduced("mamba2-2.7b"), n_slots=2, max_len=64)
+    # the citation string cannot shape a tensor: configs differing only in
+    # `source` share one bundle (the advertised bucket family)
+    assert fp == decode_fingerprint(
+        dataclasses.replace(cfg, source="elsewhere"), n_slots=2, max_len=64
+    )
+
+
+def test_graph_fingerprint_is_structural():
+    g = _small_graph()
+    assert graph_fingerprint(g) == graph_fingerprint(_small_graph())
+    assert graph_fingerprint(g) != graph_fingerprint(_small_graph(scale=2))
+
+
+def test_manifest_publish_lookup_and_dedup(tmp_path):
+    cfg = get_reduced("qwen3-0.6b")
+    man = BundleManifest(tmp_path)
+    key = bucket_key(cfg, n_slots=2, max_len=64)
+    b = _bundle(cfg)
+    path = man.publish(key, b, command="pytest")
+    assert path.exists()
+    got = man.lookup(key)
+    assert got is not None and bundle_to_obj(got) == bundle_to_obj(b)
+    assert man.lookup("no-such-bucket") is None
+
+    # a second bucket with the identical compiled payload shares one file
+    other_key = bucket_key(cfg, n_slots=2, max_len=64) + "|alias"
+    path2 = man.publish(other_key, b, command="pytest")
+    assert path2 == path
+    files = [p for p in tmp_path.glob("bundle-*.json")]
+    assert len(files) == 1
+    entries = man.buckets()
+    assert entries[key]["file"] == entries[other_key]["file"]
+    assert entries[key]["command"] == "pytest"
+
+
+def test_manifest_rejects_unknown_version(tmp_path):
+    (tmp_path / "manifest.json").write_text(
+        json.dumps({"format_version": 99, "buckets": {}})
+    )
+    with pytest.raises(ValueError, match="format version"):
+        BundleManifest(tmp_path).buckets()
+
+
+def test_resolve_bundle_accepts_bundle_file_and_dir(tmp_path):
+    cfg = get_reduced("qwen3-0.6b")
+    b = _bundle(cfg)
+    # passthrough
+    assert resolve_bundle(b, cfg, n_slots=2, max_len=64) is b
+    # single file
+    f = tmp_path / "one.json"
+    save_bundle(b, f)
+    assert bundle_to_obj(load_bundle(f)) == bundle_to_obj(b)
+    got = resolve_bundle(f, cfg, n_slots=2, max_len=64)
+    assert bundle_to_obj(got) == bundle_to_obj(b)
+    # manifest dir
+    man_dir = tmp_path / "bundles"
+    BundleManifest(man_dir).publish(
+        bucket_key(cfg, n_slots=2, max_len=64), b
+    )
+    got = resolve_bundle(man_dir, cfg, n_slots=2, max_len=64)
+    assert bundle_to_obj(got) == bundle_to_obj(b)
+    # missing bucket (different serving shape) -> explicit error
+    with pytest.raises(FileNotFoundError, match="no bundle"):
+        resolve_bundle(man_dir, cfg, n_slots=8, max_len=64)

@@ -1,0 +1,258 @@
+"""End-to-end tests for the compile→artifact→serve pipeline.
+
+Covers the two halves the PR joins:
+* ``launch/serve.py`` — previously the only launch driver with no test —
+  gets an end-to-end smoke on a reduced config (submit → run_until_done →
+  token counts + slot-reuse audit);
+* the plan-artifact path: engine construction from a ``PlanBundle`` must
+  perform NO jaxpr trace and NO planner call (asserted via the
+  instrumentation counters), must produce a byte-identical ``MemoryPlan``
+  to the plan-at-construction path, and must degrade gracefully (one-line
+  warning, plan-at-construction fallback) on fingerprint mismatch or a
+  corrupt artifact.
+"""
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core.planner as planner
+import repro.trace.jaxpr_liveness as tracer
+from repro.configs.base import get_reduced
+from repro.core import plan_io
+from repro.core.artifact import bucket_key
+from repro.launch import serve
+from repro.launch.compile import compile_and_publish
+from repro.models.api import Model
+from repro.runtime.engine import InferenceEngine
+
+ARCH = "qwen3-0.6b"
+N_SLOTS, MAX_LEN = 2, 48
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_reduced(ARCH)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return Model.for_config(cfg).init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def bundle_dir(cfg, tmp_path_factory):
+    d = tmp_path_factory.mktemp("bundles")
+    compile_and_publish(
+        cfg, d, n_slots=N_SLOTS, max_len=MAX_LEN, command="pytest"
+    )
+    return d
+
+
+# ----------------------------------------------------------- serve driver
+
+
+def test_serve_end_to_end_smoke():
+    stats = serve.run([
+        "--arch", ARCH, "--requests", "5", "--prompt-len", "4",
+        "--max-new", "4", "--slots", "2", "--max-len", "48",
+    ])
+    assert stats["requests"] == 5
+    assert stats["tokens"] == 5 * 4
+    assert all(len(t) == 4 for t in stats["tokens_per_request"].values())
+    assert stats["plan_source"] in ("planned", "cache")
+    assert stats["cold_start_s"] > 0
+    # slot-reuse audit: 5 requests over 2 slots must reuse slots, and no
+    # two requests may overlap on one slot (the §4 invariant)
+    log = stats["slot_log"]
+    assert len(log) == 5
+    by_slot: dict[int, list[tuple[int, int]]] = {}
+    for slot, first, last, _rid in log:
+        by_slot.setdefault(slot, []).append((first, last))
+    assert any(len(v) > 1 for v in by_slot.values())
+    for ivals in by_slot.values():
+        ivals.sort()
+        for (f1, l1), (f2, l2) in zip(ivals, ivals[1:]):
+            assert l1 <= f2, f"slot intervals {ivals} overlap"
+
+
+def test_serve_from_bundle_dir(bundle_dir):
+    stats = serve.run([
+        "--arch", ARCH, "--requests", "3", "--prompt-len", "4",
+        "--max-new", "3", "--slots", str(N_SLOTS), "--max-len", str(MAX_LEN),
+        "--plan-bundle", str(bundle_dir), "--compare-cold-start",
+    ])
+    assert stats["plan_source"] == "bundle"
+    assert stats["bundle_warning"] is None
+    assert stats["tokens"] == 3 * 3
+    assert stats["cold_start_noartifact_s"] is not None
+
+
+def test_serve_compile_first(tmp_path):
+    out = tmp_path / "artifacts"
+    stats = serve.run([
+        "--arch", ARCH, "--requests", "2", "--prompt-len", "3",
+        "--max-new", "2", "--slots", "2", "--max-len", "32",
+        "--plan-bundle", str(out), "--compile-first",
+    ])
+    assert stats["plan_source"] == "bundle"
+    assert (out / "manifest.json").exists()
+
+
+# ------------------------------------------------------ artifact serving
+
+
+def test_engine_from_bundle_no_trace_no_plan(cfg, params, bundle_dir):
+    traces0, plans0 = tracer.TRACE_CALLS, planner.PLAN_CALLS
+    engine = InferenceEngine(
+        cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN, plan_bundle=bundle_dir
+    )
+    assert tracer.TRACE_CALLS == traces0, "bundle path traced a jaxpr"
+    assert planner.PLAN_CALLS == plans0, "bundle path invoked the planner"
+    rep = engine.memory_report
+    assert rep.plan_source == "bundle"
+    assert rep.bundle_warning is None
+    assert "precompiled bundle" in rep.summary()
+    assert engine.plan_bundle is not None
+    # the arena is materialized straight from the stored offsets
+    assert engine.activation_arena.nbytes == max(rep.activation_plan.total_size, 1)
+
+
+def test_bundle_plan_byte_identical_to_construction_plan(cfg, params, bundle_dir):
+    eng_b = InferenceEngine(
+        cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN, plan_bundle=bundle_dir
+    )
+    eng_p = InferenceEngine(cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN)
+    a = plan_io.plan_to_obj(eng_b.memory_report.activation_plan)
+    b = plan_io.plan_to_obj(eng_p.memory_report.activation_plan)
+    # wall time is measurement, not plan content
+    a["plan_wall_s"] = b["plan_wall_s"] = 0.0
+    ja = json.dumps(a, sort_keys=True, separators=(",", ":"))
+    jb = json.dumps(b, sort_keys=True, separators=(",", ":"))
+    assert ja == jb
+
+
+def test_bundle_engine_serves_identical_tokens(cfg, params, bundle_dir):
+    engines = [
+        InferenceEngine(cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+                        plan_bundle=bundle_dir),
+        InferenceEngine(cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN),
+    ]
+    outs = []
+    for eng in engines:
+        rng = np.random.default_rng(7)
+        for _ in range(3):
+            eng.submit(rng.integers(0, cfg.vocab, size=4).astype(np.int32),
+                       max_new_tokens=3)
+        done = eng.run_until_done()
+        outs.append({r.request_id: r.tokens for r in done})
+    assert outs[0] == outs[1]
+
+
+def test_fingerprint_mismatch_falls_back_with_warning(cfg, params, bundle_dir):
+    """A bundle compiled for a different serving shape must not be served;
+    the engine plans at construction and says why in one line."""
+    from repro.core.artifact import BundleManifest
+
+    # grab the (valid) bundle and re-publish it under the bucket the engine
+    # will look up for max_len=32 — fingerprint still says max_len=48
+    man = BundleManifest(bundle_dir)
+    good = man.lookup(bucket_key(cfg, n_slots=N_SLOTS, max_len=MAX_LEN))
+    wrong_key = bucket_key(cfg, n_slots=N_SLOTS, max_len=32)
+    man.publish(wrong_key, good)
+    traces0 = tracer.TRACE_CALLS
+    engine = InferenceEngine(
+        cfg, params, n_slots=N_SLOTS, max_len=32, plan_bundle=bundle_dir
+    )
+    rep = engine.memory_report
+    assert rep.plan_source in ("planned", "cache")
+    assert rep.bundle_warning is not None
+    assert "fingerprint mismatch" in rep.bundle_warning
+    assert "WARNING" in rep.summary()
+    assert tracer.TRACE_CALLS > traces0  # fallback really replanned
+    # and the engine still serves
+    engine.submit(np.arange(3, dtype=np.int32), max_new_tokens=2)
+    assert len(engine.run_until_done()) == 1
+
+
+def test_missing_and_corrupt_bundles_fall_back(cfg, params, tmp_path):
+    # missing bucket in an empty manifest dir
+    engine = InferenceEngine(
+        cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+        plan_bundle=tmp_path,
+    )
+    assert engine.memory_report.plan_source in ("planned", "cache")
+    assert "unusable" in engine.memory_report.bundle_warning
+    # corrupt single-file bundles: garbage, valid-JSON-wrong-shape — all
+    # must degrade to plan-at-construction, never crash serving
+    for name, text in (("bad.json", "{not json"),
+                       ("list.json", "[1, 2, 3]"),
+                       ("shallow.json", '{"format_version": 1}')):
+        bad = tmp_path / name
+        bad.write_text(text)
+        engine = InferenceEngine(
+            cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN, plan_bundle=bad
+        )
+        assert engine.memory_report.bundle_warning is not None, name
+        assert engine.memory_report.plan_source in ("planned", "cache")
+
+
+def test_verify_bundle_checks_graph_fingerprint(cfg, params, bundle_dir, tmp_path):
+    """The config fingerprint cannot see model-code changes;
+    verify_bundle=True trades the zero-trace cold start for a structural
+    check of the stored graph fingerprint against a fresh trace."""
+    from repro.core.artifact import BundleManifest, save_bundle
+
+    good = BundleManifest(bundle_dir).lookup(
+        bucket_key(cfg, n_slots=N_SLOTS, max_len=MAX_LEN)
+    )
+    engine = InferenceEngine(
+        cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+        plan_bundle=good, verify_bundle=True,
+    )
+    assert engine.memory_report.plan_source == "bundle"
+
+    tampered = dataclasses.replace(good, graph_fingerprint="0" * 64)
+    f = tmp_path / "tampered.json"
+    save_bundle(tampered, f)
+    engine = InferenceEngine(
+        cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+        plan_bundle=f, verify_bundle=True,
+    )
+    rep = engine.memory_report
+    assert rep.plan_source in ("planned", "cache")
+    assert "graph fingerprint mismatch" in rep.bundle_warning
+
+
+def test_bundle_carries_xla_temp_measurement(cfg, params, bundle_dir):
+    """compile.py measures XLA's temp allocation offline so bundle-served
+    reports keep the planned-vs-XLA validation line."""
+    engine = InferenceEngine(
+        cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN, plan_bundle=bundle_dir
+    )
+    prov = engine.plan_bundle.provenance
+    assert "xla_temp_bytes" in prov
+    assert engine.memory_report.xla_temp_bytes == prov["xla_temp_bytes"]
+
+
+def test_searched_bundle_is_served_and_never_worse(cfg, params, tmp_path):
+    res = compile_and_publish(
+        cfg, tmp_path, n_slots=N_SLOTS, max_len=MAX_LEN,
+        search=True, search_iters=60, fusion_rounds=10,
+    )
+    assert res.bundle.plan.total_size <= res.greedy_plan.total_size
+    engine = InferenceEngine(
+        cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN, plan_bundle=tmp_path
+    )
+    rep = engine.memory_report
+    assert rep.plan_source == "bundle"
+    assert rep.activation_plan.total_size == res.bundle.plan.total_size
+    prov = engine.plan_bundle.provenance
+    assert prov["searched_total_bytes"] <= prov["greedy_total_bytes"]
+    # searched plans still serve correct tokens
+    engine.submit(np.arange(4, dtype=np.int32), max_new_tokens=3)
+    done = engine.run_until_done()
+    assert len(done) == 1 and len(done[0].tokens) == 3

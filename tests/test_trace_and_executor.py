@@ -125,8 +125,8 @@ def test_arena_view_is_bounds_checked():
         arena.view(0, (16,), np.float64)  # same count, fatter dtype
     np.testing.assert_array_equal(neighbor, np.full(16, 7.0, np.float32))
 
-    # a stale plan offset pointing past the buffer is also refused
-    arena.plan.offsets[0] = arena.buf.nbytes - 32
+    # a stale layout offset pointing past the buffer is also refused
+    arena.layout.offsets[0] = arena.buf.nbytes - 32
     with pytest.raises(ValueError, match="arena"):
         arena.view(0, (16,), np.float32)
 
@@ -163,3 +163,33 @@ def test_arena_executor_runs_full_model_forward():
         np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4
     )
     assert ex.stats.arena_bytes < ex.stats.naive_peak_bytes
+
+
+def test_executor_accepts_precomputed_plan():
+    """The AOT pipeline hands the executor a plan from a bundle: it must be
+    used verbatim (no planner call) and rejected when it does not cover
+    this graph's records — a stale artifact must never alias live bytes."""
+    from repro.core.planner import plan_graph
+    from repro.trace.jaxpr_liveness import trace_graph
+
+    fn, args = CASES["mlp"]
+    graph = trace_graph(fn, *args, expand_scan=False)
+    plan = plan_graph(graph, mode="offsets", alignment=64)
+
+    ex = ArenaExecutor(fn, *args, plan=plan)
+    assert ex.plan is plan
+    np.testing.assert_allclose(
+        np.asarray(ex(*args)), np.asarray(fn(*args)), rtol=1e-5, atol=1e-6
+    )
+
+    other_fn, other_args = CASES["residual"]
+    with pytest.raises(ValueError, match="does not match"):
+        ArenaExecutor(other_fn, *other_args, plan=plan)
+
+
+def test_arena_layout_validate_rejects_out_of_bounds():
+    from repro.runtime.arena import Arena, ArenaLayout
+
+    layout = ArenaLayout(total_size=64, offsets={0: 48}, sizes={0: 32})
+    with pytest.raises(ValueError, match="outside"):
+        Arena(layout)

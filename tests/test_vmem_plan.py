@@ -30,3 +30,23 @@ def test_planner_beats_naive_on_kernel_records():
     vp = plan_flash_decode_vmem(G=8, D=128, block_t=1024)
     # score/exp tiles and the retiring k/v tiles share offsets
     assert vp.plan.total_size < vp.plan.naive_size
+
+def test_fusion_budget_derives_from_vmem_model():
+    """The fusion search's kernel-local scratch budget must come from the
+    VMEM model here, not a hard-coded constant: total VMEM minus the
+    pipeline reserve the kernels keep resident."""
+    from repro.core.fusion_search import DEFAULT_LOCAL_BUDGET, default_local_budget
+    from repro.kernels.vmem_plan import (
+        VMEM_BYTES,
+        VMEM_PIPELINE_RESERVE_BYTES,
+        fusion_scratch_budget,
+    )
+
+    assert fusion_scratch_budget() == VMEM_BYTES - VMEM_PIPELINE_RESERVE_BYTES
+    assert 0 < fusion_scratch_budget() < VMEM_BYTES
+    assert default_local_budget() == fusion_scratch_budget()
+    assert DEFAULT_LOCAL_BUDGET == fusion_scratch_budget()
+    # the reserve covers the largest planned flash-decode step (the state
+    # actually co-resident with fused scratch)
+    vp = plan_flash_decode_vmem(G=8, D=128, block_t=1024)
+    assert vp.plan.total_size <= VMEM_PIPELINE_RESERVE_BYTES
