@@ -6,9 +6,11 @@ the benchmark:
 1. AOT-compiles the decode-step plan with ``--search`` (order annealing +
    fusion search on the *transformer decode graph* — the ROADMAP retarget)
    and records the searched-vs-greedy planned footprint;
-2. publishes the bundle and cold-starts an ``InferenceEngine`` from it,
-   asserting — via the trace/planner instrumentation counters — that the
-   bundle path performs ZERO jaxpr traces and ZERO planner calls;
+2. publishes the v2 bundle (activation plan + cross-step state plan) and
+   cold-starts an ``InferenceEngine`` from it, asserting — via the
+   trace/planner/state instrumentation counters — that the bundle path
+   performs ZERO jaxpr traces, ZERO planner calls, and ZERO state
+   layouts (both halves ship in the artifact);
 3. cold-starts a plan-at-construction engine (plan cache cleared) and
    records both times, so the artifact's cold-start win is a committed
    number, not a claim.
@@ -16,7 +18,9 @@ the benchmark:
 Hard checks (regressions fail CI):
 * searched footprint <= greedy footprint on EVERY arch (never-worse);
 * searched footprint strictly smaller on >= 2 archs;
-* the bundle-served engine does zero traces and zero planner calls.
+* unified footprint (activation + state) never exceeds the sum of the
+  two independently-planned halves, per bucket;
+* the bundle-served engine does zero traces/plans/state layouts.
 
 Usage:
     PYTHONPATH=src python benchmarks/serve_bench.py --quick \
@@ -33,9 +37,11 @@ import time
 import jax
 
 import repro.core.planner as planner
+import repro.core.unified as unified
 import repro.trace.jaxpr_liveness as tracer
 from repro.configs.base import get_reduced
 from repro.core import plan_io
+from repro.core.unified import PlanSession, plan_state, state_records_from_pytree
 from repro.launch.compile import compile_and_publish
 from repro.models.api import Model
 from repro.runtime.engine import InferenceEngine
@@ -58,23 +64,41 @@ def bench_arch(arch: str, bundle_dir: str, *, iters: int,
         f"{arch}: searched plan {searched} > greedy {greedy} "
         f"(never-worse contract broken)"
     )
-
+    # unified-footprint contract: the bundled (activation + state) total
+    # must never exceed the sum of the two independently-planned halves
     model = Model.for_config(cfg)
+    state_alone = plan_state(
+        state_records_from_pytree(
+            jax.eval_shape(lambda: model.init_cache(2, 64)), n_slots=2
+        ),
+        n_slots=2, max_len=64,
+    ).total_size
+    state_bytes = res.bundle.state_plan.total_size
+    unified_bytes = res.bundle.total_size
+    assert unified_bytes <= searched + state_alone, (
+        f"{arch}: unified {unified_bytes} > independently planned "
+        f"{searched} + {state_alone}"
+    )
+
     params = model.init(jax.random.PRNGKey(0))
 
-    traces0, plans0 = tracer.TRACE_CALLS, planner.PLAN_CALLS
+    traces0, plans0, states0 = (
+        tracer.TRACE_CALLS, planner.PLAN_CALLS, unified.STATE_PLAN_CALLS,
+    )
     t0 = time.perf_counter()
     engine = InferenceEngine(cfg, params, n_slots=2, max_len=64,
-                             plan_bundle=bundle_dir)
+                             session=PlanSession.from_manifest(bundle_dir))
     cold_with = time.perf_counter() - t0
     assert engine.memory_report.plan_source == "bundle", (
         f"{arch}: expected bundle-served plan, got "
         f"{engine.memory_report.plan_source} "
         f"({engine.memory_report.bundle_warning})"
     )
-    assert tracer.TRACE_CALLS == traces0 and planner.PLAN_CALLS == plans0, (
-        f"{arch}: bundle path traced or planned at construction"
-    )
+    assert (
+        tracer.TRACE_CALLS == traces0
+        and planner.PLAN_CALLS == plans0
+        and unified.STATE_PLAN_CALLS == states0
+    ), f"{arch}: bundle path traced/planned/laid out state at construction"
 
     plan_io.default_cache().clear()  # true cold start for the baseline
     t0 = time.perf_counter()
@@ -88,6 +112,8 @@ def bench_arch(arch: str, bundle_dir: str, *, iters: int,
         "greedy_bytes": greedy,
         "searched_bytes": searched,
         "delta_bytes": greedy - searched,
+        "state_bytes": state_bytes,
+        "unified_bytes": unified_bytes,
         "searched_strategy": res.bundle.plan.strategy,
         "fused_groups": (
             res.fusion_result.n_fused_groups if res.fusion_result else 0
@@ -99,9 +125,10 @@ def bench_arch(arch: str, bundle_dir: str, *, iters: int,
     }
     emit(
         f"{arch}: greedy {greedy / KB:.0f} KiB -> searched "
-        f"{searched / KB:.0f} KiB ({row['fused_groups']} fused groups); "
-        f"cold start {cold_with:.3f}s with bundle vs {cold_without:.3f}s "
-        f"without ({row['cold_start_speedup']}x)"
+        f"{searched / KB:.0f} KiB ({row['fused_groups']} fused groups) "
+        f"+ state {state_bytes / KB:.0f} KiB = {unified_bytes / KB:.0f} KiB "
+        f"unified; cold start {cold_with:.3f}s with bundle vs "
+        f"{cold_without:.3f}s without ({row['cold_start_speedup']}x)"
     )
     return row
 

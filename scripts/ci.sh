@@ -21,33 +21,55 @@ fi
 
 python -m pytest -q
 
-# compile→artifact→serve round trip: AOT-compile a reduced arch, start the
-# engine from the bundle, and assert — via the instrumentation counters —
-# that serving performed zero jaxpr traces and zero planner calls
+# the legacy-wrapper shims must stay warning-clean at import time: only
+# USING a deprecated kwarg / loading a v1 bundle may warn, importing the
+# public modules may not
+python -W error::DeprecationWarning - <<'PY'
+import repro.core
+import repro.core.artifact
+import repro.core.planner
+import repro.core.unified
+import repro.launch.compile
+import repro.launch.dryrun
+import repro.launch.serve
+import repro.runtime.arena
+import repro.runtime.engine
+import repro.runtime.executor
+print("import smoke: no DeprecationWarning on import")
+PY
+
+# compile→artifact→serve round trip on a fleet sweep: compile.py --all
+# over two small archs into ONE temp manifest, then assert serve.py
+# bucket auto-selection picks the nearest compiled bucket for a max_len
+# with no exact match — with zero jaxpr traces, zero planner calls, and
+# zero cross-step state layouts (both halves ship in the v2 bundle)
 python - <<'PY'
 import tempfile
-import jax
 import repro.core.planner as planner
+import repro.core.unified as unified
 import repro.trace.jaxpr_liveness as tracer
-from repro.configs.base import get_reduced
-from repro.launch.compile import compile_and_publish
-from repro.models.api import Model
-from repro.runtime.engine import InferenceEngine
+from repro.launch import serve
+from repro.launch.compile import main as compile_main
+import sys
 
-cfg = get_reduced("qwen3-0.6b")
 with tempfile.TemporaryDirectory() as d:
-    compile_and_publish(cfg, d, n_slots=2, max_len=48, command="scripts/ci.sh")
-    params = Model.for_config(cfg).init(jax.random.PRNGKey(0))
-    t0, p0 = tracer.TRACE_CALLS, planner.PLAN_CALLS
-    eng = InferenceEngine(cfg, params, n_slots=2, max_len=48, plan_bundle=d)
-    assert eng.memory_report.plan_source == "bundle", eng.memory_report.bundle_warning
-    assert tracer.TRACE_CALLS == t0, "bundle-served engine traced a jaxpr"
-    assert planner.PLAN_CALLS == p0, "bundle-served engine invoked the planner"
-    import numpy as np
-    eng.submit(np.arange(4, dtype=np.int32), max_new_tokens=3)
-    done = eng.run_until_done()
-    assert len(done) == 1 and len(done[0].tokens) == 3
-print("compile→serve round trip: bundle-served, zero traces, zero plans")
+    sys.argv = ["compile", "--all", "--archs", "qwen3-0.6b", "mamba2-2.7b",
+                "--slots-list", "2", "--max-lens", "32", "64", "--out", d]
+    compile_main()
+    t0, p0, s0 = tracer.TRACE_CALLS, planner.PLAN_CALLS, unified.STATE_PLAN_CALLS
+    stats = serve.run([
+        "--arch", "qwen3-0.6b", "--requests", "2", "--prompt-len", "3",
+        "--max-new", "2", "--slots", "2", "--max-len", "48",
+        "--plan-bundle", d,
+    ])
+    assert stats["plan_source"] == "bundle", stats["bundle_warning"]
+    assert stats["requested_max_len"] == 48 and stats["effective_max_len"] == 64, stats
+    assert tracer.TRACE_CALLS == t0, "auto-selected bundle traced a jaxpr"
+    assert planner.PLAN_CALLS == p0, "auto-selected bundle invoked the planner"
+    assert unified.STATE_PLAN_CALLS == s0, "auto-selected bundle laid out state"
+    assert stats["tokens"] == 4
+print("compile --all → serve: nearest-bucket auto-selection, "
+      "zero traces/plans/state layouts")
 PY
 
 if [[ -z "${SKIP_BENCH:-}" ]]; then

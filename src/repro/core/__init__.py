@@ -1,6 +1,11 @@
 """Core memory-planning library (the paper's contribution).
 
 Public API:
+    unified      — THE planning facade: ``repro.core.plan(PlanSpec) ->
+                   UnifiedPlan`` covering the activation half (MemoryPlan)
+                   and the cross-step slot/KV state half (StatePlan) under
+                   one fingerprint and one total; PlanSession is the
+                   single plan source an InferenceEngine serves from
     records      — usage records, profiles, breadths, lower bounds
     interval_set — shared overlap engine: DisjointIntervalSet (per-object
                    disjoint intervals, O(log n) fit/gap), IntervalTree
@@ -88,8 +93,26 @@ from repro.core.records import (
     positional_maximums,
     shared_objects_lower_bound,
 )
+from repro.core.unified import (
+    PlanSession,
+    PlanSpec,
+    StatePlan,
+    StateRecord,
+    UnifiedPlan,
+    plan,
+    plan_state,
+    state_records_from_pytree,
+)
 
 __all__ = [
+    "PlanSession",
+    "PlanSpec",
+    "StatePlan",
+    "StateRecord",
+    "UnifiedPlan",
+    "plan",
+    "plan_state",
+    "state_records_from_pytree",
     "FusionSearchResult",
     "fuse_groups",
     "fusion_search",

@@ -8,9 +8,14 @@ running a planning strategy:
 
 * the chosen :class:`~repro.core.planner.MemoryPlan` (usage records,
   strategy name, offsets, total size) serialized through ``plan_io``;
-* the searched order / fusion partition that produced it (when
-  ``launch/compile.py --search`` found a smaller plan than the default
-  program order), so provenance of the footprint is auditable;
+* **format v2**: the cross-step :class:`~repro.core.unified.StatePlan`
+  (slot/KV shared-objects layout with concrete offsets), so one artifact
+  covers BOTH halves of the serving bucket's memory — a v2 bundle
+  round-trips a full :class:`~repro.core.unified.UnifiedPlan`
+  (:func:`unified_from_bundle`);
+* the searched order / fusion partition that produced the activation plan
+  (when ``launch/compile.py --search`` found a smaller plan than the
+  default program order), so provenance of the footprint is auditable;
 * two fingerprints: a **cheap config-level** one (:func:`decode_fingerprint`
   — hash of the graph-shaping inputs: architecture config, slot count,
   cache length, pipeline revision) that a serving engine verifies without
@@ -24,8 +29,13 @@ canonical JSON (byte-deterministic — ``plan_wall_s`` is zeroed at publish
 time), and ``manifest.json`` maps human-readable bucket keys
 (``arch|layers|d_model|slots|len|dtype``) to bundle files. Two buckets
 whose compiled bundles coincide byte-for-byte (config aliases, recompiles)
-share one file. Loaders reject unknown format versions rather than
-guessing.
+share one file. Loaders reject unknown *newer* format versions rather
+than guessing; v1 bundles still load through a shim (one
+``DeprecationWarning``, no state plan) — their fingerprints no longer
+match a v2 engine's bucket, so they fall back to plan-at-construction
+with the usual one-line warning. A truncated or garbage ``manifest.json``
+is quarantined (renamed ``manifest.json.corrupt-<ts>``) and the index is
+rebuilt from the ``bundle-*.json`` files on disk.
 """
 
 from __future__ import annotations
@@ -35,18 +45,34 @@ import dataclasses
 import hashlib
 import json
 import os
+import re
 import time
+import warnings
 from pathlib import Path
 from typing import TYPE_CHECKING, Any
 
 from repro.core import plan_io
+from repro.core.unified import (
+    StatePlan,
+    UnifiedPlan,
+    state_plan_from_obj,
+    state_plan_to_obj,
+)
 
 if TYPE_CHECKING:  # keep this module importable without jax
     from repro.configs.base import ArchConfig
     from repro.core.graph import Graph
     from repro.core.planner import MemoryPlan
 
-BUNDLE_FORMAT_VERSION = 1
+# v2: + state_plan (cross-step slot/KV layout), + n_layers/d_model (the
+# bucket-key shape fields, so a manifest index can be rebuilt from bundle
+# files alone)
+BUNDLE_FORMAT_VERSION = 2
+
+# The manifest index schema is versioned separately: v1 manifest dirs
+# remain readable across the bundle v1->v2 rev (their per-bucket entries
+# just point at bundles a v2 engine will refuse by fingerprint).
+MANIFEST_FORMAT_VERSION = 1
 
 # Revision of the trace→plan pipeline semantics. Part of every
 # fingerprint: bump it when the tracer (scan expansion, inlining set),
@@ -119,6 +145,36 @@ def bucket_key(cfg: "ArchConfig", *, n_slots: int, max_len: int) -> str:
     )
 
 
+_BUCKET_KEY_RE = re.compile(
+    r"(?P<arch>.+)\|L(?P<n_layers>\d+)\|d(?P<d_model>\d+)"
+    r"\|slots(?P<n_slots>\d+)\|len(?P<max_len>\d+)\|(?P<dtype>[^|]+)"
+)
+
+
+def parse_bucket_key(key: str) -> dict | None:
+    """Inverse of :func:`bucket_key`: the structured bucket, or None for a
+    foreign/hand-made key (bucket auto-selection skips those)."""
+    m = _BUCKET_KEY_RE.fullmatch(key)
+    if m is None:
+        return None
+    out: dict[str, Any] = m.groupdict()
+    for field in ("n_layers", "d_model", "n_slots", "max_len"):
+        out[field] = int(out[field])
+    return out
+
+
+def bundle_bucket_key(bundle: PlanBundle) -> str | None:
+    """Reconstruct the canonical bucket key from a bundle's own fields —
+    the manifest-rebuild path. None for bundles that predate the shape
+    fields (v1 shims, hand-built test bundles)."""
+    if not bundle.n_layers or not bundle.d_model:
+        return None
+    return (
+        f"{bundle.arch}|L{bundle.n_layers}|d{bundle.d_model}"
+        f"|slots{bundle.n_slots}|len{bundle.max_len}|{bundle.dtype}"
+    )
+
+
 # ----------------------------------------------------------------- bundles
 
 
@@ -146,10 +202,20 @@ class PlanBundle:
     # deterministic compile-time metadata: tool, strategy, search stats,
     # greedy-vs-searched footprints, xla_temp_bytes when measured
     provenance: dict = dataclasses.field(default_factory=dict)
+    # v2: cross-step slot/KV state layout — None only in v1-shim bundles
+    state_plan: StatePlan | None = None
+    # v2: bucket-key shape fields (reduced() variants share cfg.name), so
+    # the manifest index is rebuildable from bundle files alone; 0 means
+    # "unknown" (v1-shim bundles, hand-built test bundles)
+    n_layers: int = 0
+    d_model: int = 0
 
     @property
     def total_size(self) -> int:
-        return self.plan.total_size
+        """Unified footprint: activation arena + cross-step state."""
+        return self.plan.total_size + (
+            self.state_plan.total_size if self.state_plan is not None else 0
+        )
 
     def summary(self) -> str:
         searched = self.provenance.get("searched_total_bytes")
@@ -160,11 +226,31 @@ class PlanBundle:
                 f" (greedy {greedy / 2**20:.3f} MiB -> "
                 f"searched {searched / 2**20:.3f} MiB)"
             )
+        state = ""
+        if self.state_plan is not None:
+            state = (
+                f" + state {self.state_plan.total_size / 2**20:.3f} MiB "
+                f"= {self.total_size / 2**20:.3f} MiB unified"
+            )
         return (
             f"bundle {self.arch} slots={self.n_slots} len={self.max_len} "
             f"{self.dtype}: {self.plan.total_size / 2**20:.3f} MiB "
-            f"[{self.plan.strategy}]{extra}"
+            f"[{self.plan.strategy}]{extra}{state}"
         )
+
+
+def unified_from_bundle(bundle: PlanBundle) -> UnifiedPlan:
+    """A v2 bundle round-trips a full UnifiedPlan: activation offsets +
+    cross-step state offsets under the bundle's fingerprint. v1-shim
+    bundles yield ``state=None`` (the engine plans that half itself)."""
+    return UnifiedPlan(
+        activation=bundle.plan,
+        state=bundle.state_plan,
+        fingerprint=bundle.fingerprint,
+        order=bundle.order,
+        fusion_groups=bundle.fusion_groups,
+        provenance=dict(bundle.provenance),
+    )
 
 
 def bundle_to_obj(bundle: PlanBundle) -> dict:
@@ -174,10 +260,17 @@ def bundle_to_obj(bundle: PlanBundle) -> dict:
         "fingerprint": bundle.fingerprint,
         "graph_fingerprint": bundle.graph_fingerprint,
         "arch": bundle.arch,
+        "n_layers": bundle.n_layers,
+        "d_model": bundle.d_model,
         "n_slots": bundle.n_slots,
         "max_len": bundle.max_len,
         "dtype": bundle.dtype,
         "plan": plan_io.plan_to_obj(plan),
+        "state_plan": (
+            state_plan_to_obj(bundle.state_plan)
+            if bundle.state_plan is not None
+            else None
+        ),
         "order": bundle.order,
         "fusion_groups": bundle.fusion_groups,
         "provenance": bundle.provenance,
@@ -190,11 +283,24 @@ def bundle_from_obj(obj: dict) -> PlanBundle:
             f"plan bundle must be a JSON object, got {type(obj).__name__}"
         )
     version = obj.get("format_version")
-    if version != BUNDLE_FORMAT_VERSION:
+    if version == 1:
+        # v1 shim: no state plan, no bucket shape fields. The bundle
+        # loads, but its fingerprint hashed format v1 — a v2 engine's
+        # expectation never matches, so fallback semantics are preserved
+        # (plan-at-construction with a one-line warning).
+        warnings.warn(
+            "loading plan-bundle format v1 (activation half only); "
+            "recompile with launch/compile.py for a v2 bundle carrying "
+            "the cross-step state plan",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+    elif version != BUNDLE_FORMAT_VERSION:
         raise ValueError(
             f"unsupported plan-bundle format version {version!r} "
-            f"(this build reads version {BUNDLE_FORMAT_VERSION})"
+            f"(this build reads versions 1-{BUNDLE_FORMAT_VERSION})"
         )
+    state_obj = obj.get("state_plan")
     return PlanBundle(
         fingerprint=obj["fingerprint"],
         graph_fingerprint=obj["graph_fingerprint"],
@@ -206,6 +312,9 @@ def bundle_from_obj(obj: dict) -> PlanBundle:
         order=obj["order"],
         fusion_groups=obj["fusion_groups"],
         provenance=obj["provenance"] or {},
+        state_plan=state_plan_from_obj(state_obj) if state_obj else None,
+        n_layers=obj.get("n_layers", 0),
+        d_model=obj.get("d_model", 0),
     )
 
 
@@ -243,7 +352,12 @@ def _locked(lock_path: Path):
     except ImportError:
         yield
         return
-    with open(lock_path, "a+") as fh:
+    try:
+        fh = open(lock_path, "a+")
+    except OSError:
+        yield  # e.g. read-only manifest dir: degrade to unlocked
+        return
+    with fh:
         try:
             fcntl.flock(fh, fcntl.LOCK_EX)
         except OSError:
@@ -276,17 +390,98 @@ class BundleManifest:
     def manifest_path(self) -> Path:
         return self.dir / MANIFEST_NAME
 
-    def _read_index(self) -> dict:
+    def _read_index(self, *, locked: bool = False) -> dict:
+        """Parse the index; a corrupt one is quarantined and rebuilt from
+        the bundle files (see :meth:`_quarantine_and_rebuild`). The
+        rebuild rewrites ``manifest.json``, so it must hold the same lock
+        ``publish()`` serializes through — callers already inside the
+        lock pass ``locked=True`` (flock is per-open-file-description:
+        re-acquiring on a fresh fd would self-deadlock)."""
+        index, reason = self._try_parse_index()
+        if reason is None:
+            return index
+        if locked:
+            return self._quarantine_and_rebuild(reason)
+        with _locked(self.dir / ".manifest.lock"):
+            # re-read first: a concurrent publish/rebuild may have fixed
+            # the index while we waited on the lock
+            index, reason = self._try_parse_index()
+            if reason is None:
+                return index
+            return self._quarantine_and_rebuild(reason)
+
+    def _try_parse_index(self) -> tuple[dict | None, str | None]:
+        """(index, None) on success, (None, reason) on a corrupt index —
+        the bundle files are the durable record, so corruption must not
+        crash publish()/lookup()."""
         try:
             obj = json.loads(self.manifest_path.read_text())
-        except (FileNotFoundError, json.JSONDecodeError):
-            return {"format_version": BUNDLE_FORMAT_VERSION, "buckets": {}}
-        if obj.get("format_version") != BUNDLE_FORMAT_VERSION:
+        except FileNotFoundError:
+            return (
+                {"format_version": MANIFEST_FORMAT_VERSION, "buckets": {}},
+                None,
+            )
+        except json.JSONDecodeError:
+            # truncated/garbage index (killed writer, disk hiccup)
+            return None, "unparseable JSON"
+        if not isinstance(obj, dict) or not isinstance(
+            obj.get("buckets"), dict
+        ):
+            return None, "not a bucket index"
+        if obj.get("format_version") != MANIFEST_FORMAT_VERSION:
             raise ValueError(
                 f"unsupported manifest format version "
                 f"{obj.get('format_version')!r} in {self.manifest_path}"
             )
-        return obj
+        return obj, None
+
+    def _quarantine_and_rebuild(self, reason: str) -> dict:
+        """Rename the corrupt index aside and rebuild it from the
+        ``bundle-*.json`` files on disk. v2 bundles carry their bucket
+        shape fields, so their canonical keys are reconstructible;
+        unreadable or pre-v2 files are skipped (their buckets are lost
+        from the index but the files stay on disk)."""
+        quarantine = self.manifest_path.with_name(
+            f"{MANIFEST_NAME}.corrupt-{int(time.time())}"
+        )
+        try:
+            self.manifest_path.replace(quarantine)
+        except OSError:
+            quarantine = None
+        index = {"format_version": MANIFEST_FORMAT_VERSION, "buckets": {}}
+        for path in sorted(self.dir.glob("bundle-*.json")):
+            try:
+                with warnings.catch_warnings():
+                    warnings.simplefilter("ignore", DeprecationWarning)
+                    bundle = load_bundle(path)
+            except Exception:
+                continue  # not a readable bundle; leave it alone
+            key = bundle_bucket_key(bundle)
+            if key is None:
+                continue  # v1 shim: bucket shape fields unknown
+            index["buckets"][key] = {
+                "file": path.name,
+                "fingerprint": bundle.fingerprint,
+                "total_size": bundle.plan.total_size,
+                "strategy": bundle.plan.strategy,
+                "created_unix": path.stat().st_mtime,
+                "command": None,
+                "rebuilt_from": reason,
+            }
+        warnings.warn(
+            f"manifest index {self.manifest_path} was corrupt ({reason}); "
+            + (f"quarantined to {quarantine.name} and " if quarantine else "")
+            + f"rebuilt {len(index['buckets'])} bucket(s) from bundle files",
+            RuntimeWarning,
+            stacklevel=3,
+        )
+        tmp = self.manifest_path.with_suffix(f".tmp{os.getpid()}")
+        try:
+            tmp.write_text(json.dumps(index, sort_keys=True, indent=1))
+            tmp.replace(self.manifest_path)
+        except OSError:
+            pass  # read-only dir: serve the rebuilt index from memory
+        return index
 
     def buckets(self) -> dict[str, dict]:
         return self._read_index()["buckets"]
@@ -307,7 +502,7 @@ class BundleManifest:
         if not path.exists():
             path.write_text(text)
         with _locked(self.dir / ".manifest.lock"):
-            index = self._read_index()
+            index = self._read_index(locked=True)
             index["buckets"][key] = {
                 "file": path.name,
                 "fingerprint": bundle.fingerprint,
@@ -327,6 +522,49 @@ class BundleManifest:
             return None
         return load_bundle(self.dir / entry["file"])
 
+    def lookup_nearest(
+        self, cfg: "ArchConfig", *, n_slots: int, max_len: int
+    ) -> tuple[str, PlanBundle] | None:
+        """Bucket auto-selection: the exact bucket if compiled, else the
+        nearest compiled ``max_len >= requested`` with identical
+        arch/layers/width/slots/dtype (a longer cache serves any shorter
+        admissible request; slots and dtype must match exactly). None when
+        no admissible bucket exists."""
+        exact = bucket_key(cfg, n_slots=n_slots, max_len=max_len)
+        buckets = self.buckets()
+        if exact in buckets:
+            return exact, load_bundle(self.dir / buckets[exact]["file"])
+        want = parse_bucket_key(exact)
+        best: tuple[int, str] | None = None
+        for key in buckets:
+            got = parse_bucket_key(key)
+            if got is None:
+                continue
+            if {**got, "max_len": 0} != {**want, "max_len": 0}:
+                continue
+            if got["max_len"] < max_len:
+                continue
+            if best is None or got["max_len"] < best[0]:
+                best = (got["max_len"], key)
+        if best is None:
+            return None
+        return best[1], load_bundle(self.dir / buckets[best[1]]["file"])
+
+
+def _describe_buckets(manifest: BundleManifest, limit: int = 12) -> str:
+    """The compiled bucket keys, for miss messages — a common fleet
+    misconfiguration (wrong --slots, unswept max_len) should read as
+    'these buckets exist, yours does not', not as a perf mystery."""
+    try:
+        keys = sorted(manifest.buckets())
+    except Exception:
+        return "manifest index unreadable"
+    if not keys:
+        return "manifest is empty"
+    shown = ", ".join(keys[:limit])
+    more = f", ... ({len(keys) - limit} more)" if len(keys) > limit else ""
+    return f"compiled buckets: {shown}{more}"
+
 
 def resolve_bundle(
     source: "PlanBundle | str | Path",
@@ -334,21 +572,33 @@ def resolve_bundle(
     *,
     n_slots: int,
     max_len: int,
+    nearest: bool = False,
 ) -> PlanBundle:
     """Accept what a serving caller naturally has: a loaded bundle, a path
-    to one bundle file, or a manifest directory (looked up by bucket key).
-    Raises ``FileNotFoundError``/``ValueError`` on missing or unreadable
-    sources; fingerprint verification is the caller's job (the engine
-    checks and falls back)."""
+    to one bundle file, or a manifest directory (looked up by bucket key;
+    with ``nearest=True`` the lookup auto-selects the nearest compiled
+    ``max_len >= requested`` bucket). Raises ``FileNotFoundError``/
+    ``ValueError`` on missing or unreadable sources — a manifest miss
+    lists the bucket keys that DO exist; fingerprint verification is the
+    caller's job (the engine checks and falls back)."""
     if isinstance(source, PlanBundle):
         return source
     path = Path(source)
     if path.is_dir():
         key = bucket_key(cfg, n_slots=n_slots, max_len=max_len)
-        bundle = BundleManifest(path).lookup(key)
-        if bundle is None:
-            raise FileNotFoundError(
-                f"no bundle for bucket {key!r} in manifest {path}"
+        manifest = BundleManifest(path)
+        if nearest:
+            found = manifest.lookup_nearest(
+                cfg, n_slots=n_slots, max_len=max_len
             )
-        return bundle
+            if found is not None:
+                return found[1]
+        else:
+            bundle = manifest.lookup(key)
+            if bundle is not None:
+                return bundle
+        raise FileNotFoundError(
+            f"no {'admissible ' if nearest else ''}bundle for bucket "
+            f"{key!r} in manifest {path}; {_describe_buckets(manifest)}"
+        )
     return load_bundle(path)

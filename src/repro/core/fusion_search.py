@@ -180,6 +180,17 @@ class FusionSearchResult:
         total = self.cache_hits + self.cache_misses
         return self.cache_hits / total if total else 0.0
 
+    def provenance(self) -> dict:
+        """Deterministic compile-time metadata for plan artifacts
+        (:mod:`repro.core.unified` merges this into bundle provenance)."""
+        return {
+            "fused_total_bytes": self.plan.total_size,
+            "fused_groups": self.n_fused_groups,
+            "internalized_bytes": self.internalized_bytes,
+            "fusion_evaluations": self.evaluations,
+            "fusion_cache_hits": self.cache_hits,
+        }
+
 
 def fusion_search(
     graph: Graph,

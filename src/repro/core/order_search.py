@@ -237,6 +237,15 @@ class OrderSearchResult:
         total = self.cache_hits + self.cache_misses
         return self.cache_hits / total if total else 0.0
 
+    def provenance(self) -> dict:
+        """Deterministic compile-time metadata for plan artifacts
+        (:mod:`repro.core.unified` merges this into bundle provenance)."""
+        return {
+            "order_total_bytes": self.plan.total_size,
+            "order_evaluations": self.evaluations,
+            "order_cache_hits": self.cache_hits,
+        }
+
 
 def _make_objective(
     objective: Objective,

@@ -161,6 +161,16 @@ def load_plan(path: str | Path) -> "MemoryPlan":
 # ------------------------------------------------------------- signatures
 
 
+def canonical_records(
+    records: Sequence[TensorUsageRecord],
+) -> list[tuple[int, int, int, int]]:
+    """Producer-order-independent canonical form, shared by every content
+    key over a record set: the plan-cache signature, the unified-plan
+    spec fingerprint, and the executor's precompiled-plan identity check.
+    """
+    return sorted((r.tensor_id, r.first_op, r.last_op, r.size) for r in records)
+
+
 def plan_signature(
     records: Sequence[TensorUsageRecord], *, mode: str, strategy: str
 ) -> str:
@@ -170,9 +180,7 @@ def plan_signature(
     does not fragment the cache. Sizes are post-alignment, so alignment
     changes re-key automatically.
     """
-    canon = sorted(
-        (r.tensor_id, r.first_op, r.last_op, r.size) for r in records
-    )
+    canon = canonical_records(records)
     payload = json.dumps(
         {
             "format_version": PLAN_FORMAT_VERSION,

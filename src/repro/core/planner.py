@@ -1,4 +1,9 @@
-"""Planner facade: one call from graph (or records) to a MemoryPlan.
+"""Activation-half planner: strategies, MemoryPlan, and thin wrappers.
+
+``plan_records``/``plan_graph`` are wrappers over the unified facade
+(:func:`repro.core.plan` in :mod:`repro.core.unified`), which also covers
+the cross-step state half; the strategy dispatch itself lives here in
+``_plan_records_impl``.
 
 Implements the paper's §6 deployment recommendations:
 * Shared Objects engines: default to Greedy-by-Size-Improved.
@@ -132,6 +137,27 @@ def plan_records(
     cache: plan_io.PlanCache | None = None,
     use_cache: bool = True,
 ) -> MemoryPlan:
+    """Thin wrapper over the unified facade (:func:`repro.core.plan`):
+    plans the activation half only. The strategy implementations live in
+    :func:`_plan_records_impl`, which ``unified.plan`` dispatches to."""
+    from repro.core import unified  # function-level: unified imports planner
+
+    spec = unified.PlanSpec(
+        records=list(records), mode=mode, strategy=strategy,
+        graph_name=graph_name, cache=cache, use_cache=use_cache,
+    )
+    return unified.plan(spec).activation
+
+
+def _plan_records_impl(
+    records: Sequence[TensorUsageRecord],
+    *,
+    mode: Mode = "offsets",
+    strategy: str = "auto",
+    graph_name: str = "records",
+    cache: plan_io.PlanCache | None = None,
+    use_cache: bool = True,
+) -> MemoryPlan:
     global PLAN_CALLS
     PLAN_CALLS += 1
     records = list(records)
@@ -203,13 +229,12 @@ def plan_graph(
     cache: plan_io.PlanCache | None = None,
     use_cache: bool = True,
 ) -> MemoryPlan:
-    # alignment needs no explicit cache key: it is baked into the record
-    # sizes the signature hashes
-    return plan_records(
-        graph.usage_records(alignment),
-        mode=mode,
-        strategy=strategy,
-        graph_name=graph.name,
-        cache=cache,
-        use_cache=use_cache,
+    """Thin wrapper over the unified facade. Alignment needs no explicit
+    cache key: it is baked into the record sizes the signature hashes."""
+    from repro.core import unified  # function-level: unified imports planner
+
+    spec = unified.PlanSpec(
+        graph=graph, mode=mode, strategy=strategy, alignment=alignment,
+        cache=cache, use_cache=use_cache,
     )
+    return unified.plan(spec).activation

@@ -306,6 +306,40 @@ def _greedy_by_size_improved_staged(
     return asn
 
 
+def from_slot_log(
+    slot_log: Sequence[tuple[int, int, int, int]],
+    *,
+    n_slots: int,
+    slot_size: int = 1,
+) -> SharedObjectsAssignment:
+    """Build the §4-style assignment from a serving slot log
+    (``(slot, first_wave, last_wave, request_id)`` tuples, as recorded by
+    the engine): slots are the shared objects, requests the tensors, the
+    decode wave the operator index. Raises ``ValueError`` if two requests
+    overlap on one slot — this is the runtime audit of the cross-step
+    :class:`~repro.core.unified.StatePlan`'s shared-objects claim."""
+    asn = SharedObjectsAssignment(
+        strategy="slot_log",
+        objects=[SharedObject(object_id=s, size=slot_size) for s in range(n_slots)],
+        assignment={},
+    )
+    for slot, first, last, rid in slot_log:
+        if not 0 <= slot < n_slots:
+            raise ValueError(f"request {rid}: slot {slot} outside [0, {n_slots})")
+        obj = asn.objects[slot]
+        # closed wave intervals; the engine frees a slot at the END of its
+        # finishing wave and admits at the start of the next, so legal
+        # hand-offs never share a wave and plain overlap is a violation
+        if obj.interval_set.overlaps(first, last):
+            raise ValueError(
+                f"request {rid}: interval [{first}, {last}] overlaps an "
+                f"earlier request on slot {slot}"
+            )
+        obj.interval_set.add(first, last, rid)
+        asn.assignment[rid] = slot
+    return asn
+
+
 STRATEGIES: dict[str, Callable[[Sequence[TensorUsageRecord]], SharedObjectsAssignment]] = {
     "greedy_by_size": greedy_by_size,
     "greedy_by_size_improved": greedy_by_size_improved,

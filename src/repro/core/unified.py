@@ -1,0 +1,640 @@
+"""Unified planning facade: one ``plan()`` over both of the paper's halves.
+
+The paper poses two memory-planning problems that this repo used to solve
+through disjoint code paths with incompatible inputs and outputs:
+
+* **intra-step activation sharing** — Offset Calculation / Shared Objects
+  over tensor usage records of one decode step (§4–§5, ``core/planner``);
+* **cross-step shared-objects state** — per-slot KV caches and decode
+  buffers reused across requests, §4 applied *above* the XLA level where
+  slots are the shared objects and requests are the tensors
+  (``core/shared_objects``, audited by the engine's slot log).
+
+This module joins them under one API:
+
+* :class:`PlanSpec` — everything a planning request is made of: the
+  activation graph (or raw usage records), the cross-step
+  :class:`StateRecord` set, the strategy/search knobs, and the bucket
+  identity (config, ``n_slots``, ``max_len``);
+* :func:`plan` — ``repro.core.plan(spec) -> UnifiedPlan``: plans the
+  activation half (optionally through the memory-aware order/fusion
+  search), lays out the cross-step state half, and returns both under one
+  fingerprint and one ``total_size``;
+* :class:`StatePlan` — the slot/KV shared-objects layout with concrete
+  byte offsets: ``n_slots`` symmetric slot regions, each packing the
+  per-slot share of every state leaf (size-descending, aligned), so a
+  serving process can account for — and materialize — the cross-step
+  arena without touching a model;
+* :class:`PlanSession` — the single plan *source* an
+  :class:`~repro.runtime.engine.InferenceEngine` consumes: a bundle
+  manifest (``from_manifest``, with nearest-bucket selection), one bundle
+  (``from_bundle``), or a spec planned on demand (``from_spec``).
+
+``planner.plan_records``/``planner.plan_graph`` are thin wrappers over
+:func:`plan`; the strategy implementations themselves still live in
+``core/planner``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+from pathlib import Path
+from typing import TYPE_CHECKING, Any, Sequence
+
+from repro.core import plan_io
+from repro.core.records import DEFAULT_ALIGNMENT, TensorUsageRecord, align
+
+if TYPE_CHECKING:  # keep this module importable without jax
+    from repro.configs.base import ArchConfig
+    from repro.core.artifact import PlanBundle
+    from repro.core.graph import Graph
+    from repro.core.planner import MemoryPlan
+    from repro.core.fusion_search import FusionSearchResult
+    from repro.core.order_search import OrderSearchResult
+    from repro.runtime.arena import ArenaLayout
+
+# Instrumentation: total state-plan constructions this process. A
+# bundle-served engine must not lay out the cross-step state either —
+# tests snapshot this next to planner.PLAN_CALLS / tracer.TRACE_CALLS.
+STATE_PLAN_CALLS = 0
+
+STATE_STRATEGY = "slots_as_shared_objects"
+
+
+# ------------------------------------------------------- cross-step state
+
+
+@dataclasses.dataclass(frozen=True)
+class StateRecord:
+    """One cross-step state tensor (a cache-pytree leaf): its identity and
+    full (all-slot) byte size. The per-slot share is ``nbytes / n_slots``
+    — every leaf carries the slot batch dimension, so the division is
+    exact (checked by :func:`plan_state`)."""
+
+    path: str  # pytree key path, e.g. "['period'][0]['kv'][1]"
+    shape: tuple[int, ...]
+    dtype: str
+    nbytes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class StateLeaf:
+    """A :class:`StateRecord` placed inside one slot region: aligned
+    per-slot byte size + concrete offset within the slot."""
+
+    path: str
+    shape: tuple[int, ...]
+    dtype: str
+    slot_nbytes: int  # aligned per-slot bytes
+    offset: int  # byte offset within a slot region
+
+
+@dataclasses.dataclass
+class StatePlan:
+    """Slot/KV shared-objects layout with concrete offsets (paper §4 at
+    the request level). ``n_slots`` identical slot regions of
+    ``slot_stride`` bytes; leaf ``l`` of slot ``s`` lives at
+    ``s * slot_stride + leaves[l].offset``. Slots are the shared objects:
+    an object's size is the full per-slot state, and request→slot
+    assignment happens at serving time (the engine's slot log is the
+    §4-style audit, see :func:`repro.core.shared_objects.from_slot_log`).
+    """
+
+    n_slots: int
+    max_len: int
+    alignment: int
+    leaves: list[StateLeaf]
+    slot_stride: int
+    total_size: int
+    strategy: str = STATE_STRATEGY
+
+    @property
+    def bytes_per_slot(self) -> int:
+        return self.slot_stride
+
+    def offset_of(self, slot: int, path: str) -> int:
+        if not 0 <= slot < self.n_slots:
+            raise IndexError(f"slot {slot} outside [0, {self.n_slots})")
+        for leaf in self.leaves:
+            if leaf.path == path:
+                return slot * self.slot_stride + leaf.offset
+        raise KeyError(f"no state leaf at path {path!r}")
+
+    def flat_entries(self) -> list[tuple[int, int, StateLeaf, int]]:
+        """(tensor_id, slot, leaf, absolute_offset) for every (slot, leaf)
+        pair — the arena-materialization view. Ids are dense:
+        ``slot * len(leaves) + leaf_index``."""
+        out = []
+        for slot in range(self.n_slots):
+            base = slot * self.slot_stride
+            for i, leaf in enumerate(self.leaves):
+                out.append(
+                    (slot * len(self.leaves) + i, slot, leaf, base + leaf.offset)
+                )
+        return out
+
+    def summary(self) -> str:
+        return (
+            f"state[{self.strategy}]: {self.total_size / 2**20:.3f} MiB "
+            f"({self.n_slots} slots x {self.slot_stride / 2**20:.3f} MiB, "
+            f"{len(self.leaves)} leaves, len {self.max_len})"
+        )
+
+
+def state_records_from_pytree(tree: Any, *, n_slots: int) -> list[StateRecord]:
+    """Derive :class:`StateRecord`\\ s from a cache pytree — concrete jax
+    arrays, numpy arrays, or ``jax.eval_shape`` ShapeDtypeStructs (the
+    compile path never materializes a cache)."""
+    import jax  # runtime-only dependency; planning itself stays jax-free
+    import numpy as np
+
+    leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    records = []
+    for path, leaf in leaves:
+        dt = np.dtype(leaf.dtype)
+        shape = tuple(int(d) for d in leaf.shape)
+        records.append(
+            StateRecord(
+                path=jax.tree_util.keystr(path),
+                shape=shape,
+                dtype=dt.name,
+                nbytes=math.prod(shape) * dt.itemsize,
+            )
+        )
+    del n_slots  # divisibility is checked where the layout is built
+    return records
+
+
+def plan_state(
+    records: Sequence[StateRecord],
+    *,
+    n_slots: int,
+    max_len: int,
+    alignment: int = DEFAULT_ALIGNMENT,
+) -> StatePlan:
+    """Lay out the cross-step state: per-slot shares packed
+    size-descending (deterministic: ties break on path), each aligned, in
+    ``n_slots`` symmetric regions. Objective as in §4 — total size of all
+    shared objects — is ``n_slots * slot_stride`` by symmetry."""
+    global STATE_PLAN_CALLS
+    STATE_PLAN_CALLS += 1
+    placed: list[StateLeaf] = []
+    offset = 0
+    for rec in sorted(records, key=lambda r: (-r.nbytes, r.path)):
+        if rec.nbytes % n_slots:
+            raise ValueError(
+                f"state leaf {rec.path!r}: {rec.nbytes} B not divisible by "
+                f"{n_slots} slots — every cross-step leaf must carry the "
+                f"slot batch dimension"
+            )
+        slot_nbytes = align(rec.nbytes // n_slots, alignment)
+        placed.append(
+            StateLeaf(
+                path=rec.path,
+                shape=rec.shape,
+                dtype=rec.dtype,
+                slot_nbytes=slot_nbytes,
+                offset=offset,
+            )
+        )
+        offset += slot_nbytes
+    stride = align(offset, alignment)
+    return StatePlan(
+        n_slots=n_slots,
+        max_len=max_len,
+        alignment=alignment,
+        leaves=placed,
+        slot_stride=stride,
+        total_size=n_slots * stride,
+    )
+
+
+def state_plan_to_obj(sp: StatePlan) -> dict:
+    return {
+        "n_slots": sp.n_slots,
+        "max_len": sp.max_len,
+        "alignment": sp.alignment,
+        "slot_stride": sp.slot_stride,
+        "total_size": sp.total_size,
+        "strategy": sp.strategy,
+        "leaves": [
+            [l.path, list(l.shape), l.dtype, l.slot_nbytes, l.offset]
+            for l in sp.leaves
+        ],
+    }
+
+
+def state_plan_from_obj(obj: dict) -> StatePlan:
+    return StatePlan(
+        n_slots=obj["n_slots"],
+        max_len=obj["max_len"],
+        alignment=obj["alignment"],
+        leaves=[
+            StateLeaf(
+                path=p, shape=tuple(shape), dtype=dt, slot_nbytes=nb, offset=off
+            )
+            for p, shape, dt, nb, off in obj["leaves"]
+        ],
+        slot_stride=obj["slot_stride"],
+        total_size=obj["total_size"],
+        strategy=obj["strategy"],
+    )
+
+
+# ------------------------------------------------------------ spec + plan
+
+
+@dataclasses.dataclass
+class PlanSpec:
+    """One planning request, covering both halves.
+
+    Activation input is the ``graph`` (preferred — enables ``search``) or
+    raw ``records``; the cross-step half is ``state_records`` (omit for an
+    activation-only plan). ``cfg``/``n_slots``/``max_len`` are the bucket
+    identity: with all three set the plan's fingerprint is the bundle's
+    config-level :func:`~repro.core.artifact.decode_fingerprint`, so a
+    spec-planned :class:`UnifiedPlan` and a compiled bundle for the same
+    bucket carry the same key."""
+
+    graph: "Graph | None" = None
+    records: Sequence[TensorUsageRecord] | None = None
+    state_records: Sequence[StateRecord] | None = None
+    # bucket identity
+    cfg: "ArchConfig | None" = None
+    n_slots: int | None = None
+    max_len: int | None = None
+    # strategy / search knobs
+    mode: str = "offsets"
+    strategy: str = "auto"
+    alignment: int = DEFAULT_ALIGNMENT
+    search: bool = False
+    search_iters: int = 300
+    fusion_rounds: int = 40
+    # plan-cache control
+    cache: "plan_io.PlanCache | None" = None
+    use_cache: bool = True
+    graph_name: str = "records"
+
+
+@dataclasses.dataclass
+class SearchOutcome:
+    """Search-path by-products that serving artifacts don't carry whole:
+    the pre-search plan and the full order/fusion results."""
+
+    greedy_plan: "MemoryPlan"
+    order: "OrderSearchResult"
+    fusion: "FusionSearchResult"
+
+
+@dataclasses.dataclass
+class UnifiedPlan:
+    """Both halves of a serving bucket's memory plan under one fingerprint
+    and one ``total_size``. ``activation`` may be None for a state-only
+    spec (and vice versa)."""
+
+    activation: "MemoryPlan | None"
+    state: StatePlan | None
+    fingerprint: str
+    # searched-order / fusion provenance for the activation half (same
+    # semantics as PlanBundle.order / .fusion_groups)
+    order: list[int] | None = None
+    fusion_groups: list[list[int]] | None = None
+    provenance: dict = dataclasses.field(default_factory=dict)
+    # search by-products; never serialized (bundles keep provenance only)
+    search: SearchOutcome | None = None
+
+    @property
+    def total_size(self) -> int:
+        total = 0
+        if self.activation is not None:
+            total += self.activation.total_size
+        if self.state is not None:
+            total += self.state.total_size
+        return total
+
+    def arena_layouts(self) -> "tuple[ArenaLayout | None, ArenaLayout | None]":
+        """Materialization view: (activation layout, state layout) — both
+        arenas from this one object."""
+        from repro.runtime.arena import ArenaLayout
+
+        return (
+            ArenaLayout.from_plan(self.activation)
+            if self.activation is not None
+            else None,
+            ArenaLayout.from_state_plan(self.state)
+            if self.state is not None
+            else None,
+        )
+
+    def summary(self) -> str:
+        lines = []
+        if self.activation is not None:
+            lines.append(self.activation.summary())
+        if self.state is not None:
+            lines.append(self.state.summary())
+        lines.append(
+            f"unified footprint: {self.total_size / 2**20:.3f} MiB "
+            f"[{self.fingerprint[:12]}]"
+        )
+        return "\n".join(lines)
+
+
+def _spec_fingerprint(spec: PlanSpec, records, state_records) -> str:
+    """Content fingerprint for bucket-less specs: everything the unified
+    output depends on. Bucketed specs use the config-level
+    ``decode_fingerprint`` instead (shared with compiled bundles)."""
+    payload = {
+        "planner_revision": plan_io.PLANNER_REVISION,
+        "mode": spec.mode,
+        "strategy": spec.strategy,
+        "search": spec.search,
+        "records": plan_io.canonical_records(records) if records else None,
+        "state": [
+            [r.path, list(r.shape), r.dtype, r.nbytes]
+            for r in (state_records or [])
+        ],
+        "n_slots": spec.n_slots,
+        "max_len": spec.max_len,
+    }
+    text = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(text.encode()).hexdigest()
+
+
+def plan(spec: PlanSpec) -> UnifiedPlan:
+    """THE planning entry point: activation half (with optional
+    order/fusion search) + cross-step state half, one fingerprint, one
+    total. Every other planner API is a wrapper over this."""
+    from repro.core import planner
+
+    records = None
+    if spec.records is not None:
+        records = list(spec.records)
+    elif spec.graph is not None:
+        records = spec.graph.usage_records(spec.alignment)
+    if records is None and spec.state_records is None:
+        raise ValueError(
+            "empty PlanSpec: provide an activation graph/records, "
+            "state_records, or both"
+        )
+
+    activation: "MemoryPlan | None" = None
+    order: list[int] | None = None
+    groups: list[list[int]] | None = None
+    outcome: SearchOutcome | None = None
+    provenance: dict = {}
+    if records is not None:
+        graph_name = spec.graph.name if spec.graph is not None else spec.graph_name
+        activation = planner._plan_records_impl(
+            records,
+            mode=spec.mode,
+            strategy=spec.strategy,
+            graph_name=graph_name,
+            cache=spec.cache,
+            use_cache=spec.use_cache,
+        )
+        if spec.search:
+            if spec.graph is None:
+                raise ValueError("search=True needs a graph, not raw records")
+            from repro.core.fusion_search import fusion_search
+            from repro.core.order_search import search_order
+
+            search_cache = (
+                spec.cache if spec.cache is not None else plan_io.PlanCache()
+            )
+            order_res = search_order(
+                spec.graph, iters=spec.search_iters, seed=0,
+                strategy=spec.strategy, cache=search_cache,
+            )
+            fusion_res = fusion_search(
+                spec.graph, strategy=spec.strategy,
+                max_rounds=spec.fusion_rounds, cache=search_cache,
+            )
+            outcome = SearchOutcome(
+                greedy_plan=activation, order=order_res, fusion=fusion_res
+            )
+            # both searches honor the never-worse contract; take the smaller
+            if fusion_res.plan.total_size < activation.total_size and (
+                fusion_res.plan.total_size <= order_res.plan.total_size
+            ):
+                activation = fusion_res.plan
+                groups = [list(g) for g in fusion_res.groups]
+            elif order_res.plan.total_size < activation.total_size:
+                activation = order_res.plan
+                order = list(order_res.order)
+            provenance["search_stats"] = {
+                **order_res.provenance(),
+                **fusion_res.provenance(),
+                "order_iters": spec.search_iters,
+                "fusion_rounds": spec.fusion_rounds,
+            }
+        provenance.update(
+            {
+                "strategy_requested": spec.strategy,
+                "search": spec.search,
+                "records": len(records),
+                "greedy_total_bytes": (
+                    outcome.greedy_plan.total_size
+                    if outcome is not None
+                    else activation.total_size
+                ),
+                "searched_total_bytes": (
+                    min(
+                        outcome.order.plan.total_size,
+                        outcome.fusion.plan.total_size,
+                    )
+                    if outcome is not None
+                    else None
+                ),
+            }
+        )
+        if spec.graph is not None:
+            provenance["graph_ops"] = len(spec.graph.ops)
+
+    state: StatePlan | None = None
+    if spec.state_records is not None:
+        if spec.n_slots is None or spec.max_len is None:
+            raise ValueError("state_records need n_slots and max_len")
+        state = plan_state(
+            spec.state_records,
+            n_slots=spec.n_slots,
+            max_len=spec.max_len,
+            alignment=spec.alignment,
+        )
+        provenance["state_total_bytes"] = state.total_size
+        provenance["state_leaves"] = len(state.leaves)
+
+    if (
+        spec.cfg is not None
+        and spec.n_slots is not None
+        and spec.max_len is not None
+    ):
+        from repro.core.artifact import decode_fingerprint
+
+        fingerprint = decode_fingerprint(
+            spec.cfg, n_slots=spec.n_slots, max_len=spec.max_len
+        )
+    else:
+        fingerprint = _spec_fingerprint(spec, records, spec.state_records)
+
+    return UnifiedPlan(
+        activation=activation,
+        state=state,
+        fingerprint=fingerprint,
+        order=order,
+        fusion_groups=groups,
+        provenance=provenance,
+        search=outcome,
+    )
+
+
+# ---------------------------------------------------------------- session
+
+
+@dataclasses.dataclass
+class Resolution:
+    """What a :class:`PlanSession` hands the engine: the unified plan (or
+    None — trace-and-plan fallback), the backing bundle when there is one,
+    the effective serving ``max_len`` (>= requested when nearest-bucket
+    selection picked a longer compiled bucket), a one-line warning for the
+    report, and the spec knobs the fallback path should honor."""
+
+    unified: UnifiedPlan | None
+    bundle: "PlanBundle | None"
+    source: str  # "bundle" | "spec" | "unresolved"
+    warning: str | None
+    max_len: int
+    spec: PlanSpec | None = None
+
+
+class PlanSession:
+    """The one plan source an engine serves from.
+
+    ``from_manifest(dir)`` — compiled-artifact serving with bucket
+    auto-selection: exact bucket first, else the nearest compiled
+    ``max_len >= requested`` with the same arch/slots/dtype (pass
+    ``nearest=False`` for exact-only). ``from_bundle`` — one bundle file
+    or object. ``from_spec`` — plan on demand from a :class:`PlanSpec`
+    (pre-searched graphs, pinned strategies); an empty spec defers to the
+    engine's own trace. ``verify_graph=True`` asks the engine to check the
+    bundle's structural graph fingerprint against a fresh trace (trades
+    the zero-trace cold start for a model-code-drift check)."""
+
+    def __init__(
+        self,
+        *,
+        manifest_dir: str | Path | None = None,
+        bundle: "PlanBundle | str | Path | None" = None,
+        spec: PlanSpec | None = None,
+        nearest: bool = True,
+        verify_graph: bool = False,
+    ):
+        sources = [manifest_dir is not None, bundle is not None, spec is not None]
+        if sum(sources) != 1:
+            raise ValueError(
+                "PlanSession takes exactly one source: manifest_dir, "
+                "bundle, or spec"
+            )
+        self.manifest_dir = Path(manifest_dir) if manifest_dir else None
+        self.bundle = bundle
+        self.spec = spec
+        self.nearest = nearest
+        self.verify_graph = verify_graph
+
+    @classmethod
+    def from_manifest(
+        cls, directory: str | Path, *, nearest: bool = True,
+        verify_graph: bool = False,
+    ) -> "PlanSession":
+        return cls(
+            manifest_dir=directory, nearest=nearest, verify_graph=verify_graph
+        )
+
+    @classmethod
+    def from_bundle(
+        cls, bundle: "PlanBundle | str | Path", *, verify_graph: bool = False
+    ) -> "PlanSession":
+        return cls(bundle=bundle, verify_graph=verify_graph)
+
+    @classmethod
+    def from_spec(cls, spec: PlanSpec) -> "PlanSession":
+        return cls(spec=spec)
+
+    def resolve(
+        self, cfg: "ArchConfig", *, n_slots: int, max_len: int
+    ) -> Resolution:
+        if self.spec is not None:
+            return self._resolve_spec(cfg, n_slots=n_slots, max_len=max_len)
+        return self._resolve_bundle(cfg, n_slots=n_slots, max_len=max_len)
+
+    def _resolve_spec(self, cfg, *, n_slots: int, max_len: int) -> Resolution:
+        spec = dataclasses.replace(
+            self.spec, cfg=cfg, n_slots=n_slots, max_len=max_len
+        )
+        if spec.graph is None and spec.records is None:
+            # knobs only — the engine traces, then plans with these knobs
+            return Resolution(
+                unified=None, bundle=None, source="spec", warning=None,
+                max_len=max_len, spec=spec,
+            )
+        return Resolution(
+            unified=plan(spec), bundle=None, source="spec", warning=None,
+            max_len=max_len, spec=spec,
+        )
+
+    def _resolve_bundle(self, cfg, *, n_slots: int, max_len: int) -> Resolution:
+        from repro.core import artifact
+
+        nearest = self.nearest and self.manifest_dir is not None
+        source = self.bundle if self.bundle is not None else self.manifest_dir
+        try:
+            bundle = artifact.resolve_bundle(
+                source, cfg, n_slots=n_slots, max_len=max_len,
+                nearest=nearest,
+            )
+        except Exception as e:
+            # a bad artifact degrades to plan-at-construction, never
+            # crashes serving (whatever a corrupt or adversarially
+            # malformed document raises)
+            return Resolution(
+                unified=None, bundle=None, source="unresolved",
+                warning=f"plan bundle unusable ({e}); "
+                        f"planned at construction instead",
+                max_len=max_len,
+            )
+        # Nearest-bucket mode verifies the bundle against ITS OWN bucket
+        # (serving max_len >= requested is the point of auto-selection);
+        # strict mode (single bundles, exact-only manifests) keeps the
+        # requested bucket as the expectation.
+        if nearest and bundle.max_len < max_len:
+            return Resolution(
+                unified=None, bundle=None, source="unresolved",
+                warning=(
+                    f"plan bundle compiled for max_len={bundle.max_len} < "
+                    f"requested {max_len}; planned at construction instead"
+                ),
+                max_len=max_len,
+            )
+        verify_len = bundle.max_len if nearest else max_len
+        expect = artifact.decode_fingerprint(
+            cfg, n_slots=n_slots, max_len=verify_len
+        )
+        if bundle.fingerprint != expect:
+            return Resolution(
+                unified=None, bundle=None, source="unresolved",
+                warning=(
+                    f"plan bundle fingerprint mismatch (bundle "
+                    f"{str(bundle.fingerprint)[:12]}, engine {expect[:12]}); "
+                    f"planned at construction instead"
+                ),
+                max_len=max_len,
+            )
+        return Resolution(
+            unified=artifact.unified_from_bundle(bundle),
+            bundle=bundle,
+            source="bundle",
+            warning=None,
+            max_len=max(bundle.max_len, max_len) if nearest else max_len,
+        )

@@ -1,29 +1,40 @@
-"""AOT plan compiler: decode graph -> searched memory plan -> bundle.
+"""AOT plan compiler: decode graph -> unified memory plan -> bundle.
 
 The offline half of the compile→artifact→serve pipeline. For one
-``(arch, n_slots, max_len)`` serving bucket this entrypoint:
+``(arch, n_slots, max_len, dtype)`` serving bucket this entrypoint:
 
 1. traces the decode step to its liveness graph **at the shape level**
    (``jax.eval_shape`` parameter/cache pytrees — no weights are ever
    materialized, so compiling a plan for a 400B-parameter config costs
-   megabytes, not terabytes);
-2. plans it with the paper's Offset Calculation portfolio, and with
-   ``--search`` also runs the memory-aware topological-order annealing and
-   the MAFAT-style fusion search (``core/order_search`` /
-   ``core/fusion_search``) against the cached planner — this is the
-   ROADMAP item "retarget search at transformer decode graphs": the outer
-   search finally points at graphs with residual-stream slack instead of
-   the paper's breadth-pinned convnets;
-3. validates the winning plan with the independent first-principles
-   checker (``core/validate.check_offsets``);
-4. publishes a versioned, fingerprinted :class:`~repro.core.artifact.PlanBundle`
-   into a content-addressed manifest directory that
-   ``InferenceEngine(plan_bundle=...)`` / ``launch/serve.py --plan-bundle``
-   serve from without tracing or planning anything.
+   megabytes, not terabytes) and derives the cross-step state records
+   from the same shape-level cache pytree;
+2. submits ONE :class:`~repro.core.unified.PlanSpec` to the unified
+   facade (``repro.core.plan``): the activation half runs the paper's
+   Offset Calculation portfolio — with ``--search`` also the memory-aware
+   topological-order annealing and the MAFAT-style fusion search
+   (``core/order_search`` / ``core/fusion_search``) against the cached
+   planner — and the cross-step half gets the slot/KV shared-objects
+   layout with concrete offsets;
+3. validates the winning activation plan with the independent
+   first-principles checker (``core/validate.check_offsets``);
+4. publishes a versioned, fingerprinted v2
+   :class:`~repro.core.artifact.PlanBundle` carrying BOTH halves into a
+   content-addressed manifest directory that
+   ``InferenceEngine(session=PlanSession.from_manifest(dir))`` /
+   ``launch/serve.py --plan-bundle`` serve from without tracing, planning,
+   or laying anything out.
+
+``--all`` sweeps a whole fleet's bucket grid — every selected arch ×
+``--slots-list`` × ``--max-lens`` (× ``--dtypes``) — into one manifest,
+so ``serve.py`` bucket auto-selection (nearest compiled
+``max_len >= requested``) can answer any admissible request with zero
+traces and zero planner calls.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.compile --arch qwen3-0.6b \
         --search [--full] [--slots 4] [--max-len 128] [--out plan_artifacts]
+    PYTHONPATH=src python -m repro.launch.compile --all \
+        --slots-list 2 4 --max-lens 64 128 256 --out plan_artifacts
 """
 
 from __future__ import annotations
@@ -43,14 +54,19 @@ from repro.core.artifact import (
     BundleManifest,
     PlanBundle,
     bucket_key,
-    decode_fingerprint,
     graph_fingerprint,
 )
-from repro.core.fusion_search import FusionSearchResult, fusion_search
+from repro.core.fusion_search import FusionSearchResult
 from repro.core.graph import Graph
-from repro.core.order_search import OrderSearchResult, search_order
+from repro.core.order_search import OrderSearchResult
 from repro.core.plan_io import PlanCache
-from repro.core.planner import MemoryPlan, plan_graph
+from repro.core.planner import MemoryPlan
+from repro.core.unified import (
+    PlanSpec,
+    UnifiedPlan,
+    plan as plan_unified,
+    state_records_from_pytree,
+)
 from repro.core.validate import check_offsets
 from repro.models.api import Model
 from repro.trace.jaxpr_liveness import trace_graph
@@ -62,6 +78,7 @@ DEFAULT_BUNDLE_DIR = "plan_artifacts"
 class CompileResult:
     bundle: PlanBundle
     graph: Graph
+    unified: UnifiedPlan
     greedy_plan: MemoryPlan
     order_result: OrderSearchResult | None
     fusion_result: FusionSearchResult | None
@@ -147,83 +164,59 @@ def compile_decode_plan(
     cache: PlanCache | None = None,
     measure_xla: bool = True,
 ) -> CompileResult:
-    """Trace → (search) → plan → validate → bundle, all in memory."""
+    """Trace → unified plan (both halves) → validate → bundle, in memory."""
     wall0 = time.perf_counter()
-    graph = trace_decode_graph(cfg, n_slots=n_slots, max_len=max_len)
-    greedy_plan = plan_graph(graph, mode="offsets", strategy=strategy)
-    check_offsets(greedy_plan.records, greedy_plan)
+    decode, specs = _decode_specs(cfg, n_slots=n_slots, max_len=max_len)
+    graph = trace_graph(decode, *specs, name=f"{cfg.name}-decode")
+    # the shape-level cache pytree (specs[2]) feeds the cross-step half
+    state_records = state_records_from_pytree(specs[2], n_slots=n_slots)
 
-    best_plan = greedy_plan
-    order: list[int] | None = None
-    groups: list[list[int]] | None = None
-    order_res: OrderSearchResult | None = None
-    fusion_res: FusionSearchResult | None = None
-    if search:
-        search_cache = cache if cache is not None else PlanCache()
-        order_res = search_order(
-            graph, iters=search_iters, seed=0, strategy=strategy,
-            cache=search_cache,
-        )
-        fusion_res = fusion_search(
-            graph, strategy=strategy, max_rounds=fusion_rounds,
-            cache=search_cache,
-        )
-        # both searches honor the never-worse contract; take the smaller
-        if fusion_res.plan.total_size < best_plan.total_size and (
-            fusion_res.plan.total_size <= order_res.plan.total_size
-        ):
-            best_plan = fusion_res.plan
-            groups = [list(g) for g in fusion_res.groups]
-        elif order_res.plan.total_size < best_plan.total_size:
-            best_plan = order_res.plan
-            order = list(order_res.order)
-        if best_plan is not greedy_plan:
-            check_offsets(best_plan.records, best_plan)
+    unified = plan_unified(PlanSpec(
+        graph=graph,
+        state_records=state_records,
+        cfg=cfg,
+        n_slots=n_slots,
+        max_len=max_len,
+        strategy=strategy,
+        search=search,
+        search_iters=search_iters,
+        fusion_rounds=fusion_rounds,
+        cache=cache,
+    ))
+    best_plan = unified.activation
+    check_offsets(best_plan.records, best_plan)
 
-    provenance: dict = {
+    provenance = {
         "tool": "repro.launch.compile",
-        "strategy_requested": strategy,
-        "search": search,
-        "graph_ops": len(graph.ops),
-        "records": len(best_plan.records),
-        "greedy_total_bytes": greedy_plan.total_size,
-        "searched_total_bytes": (
-            min(order_res.plan.total_size, fusion_res.plan.total_size)
-            if search else None
-        ),
+        **unified.provenance,
         "xla_temp_bytes": (
             _measure_xla_temp(cfg, n_slots=n_slots, max_len=max_len)
             if measure_xla else None
         ),
     }
-    if search:
-        provenance["search_stats"] = {
-            "order_total_bytes": order_res.plan.total_size,
-            "fused_total_bytes": fusion_res.plan.total_size,
-            "fused_groups": fusion_res.n_fused_groups,
-            "internalized_bytes": fusion_res.internalized_bytes,
-            "evaluations": order_res.evaluations + fusion_res.evaluations,
-            "order_iters": search_iters,
-            "fusion_rounds": fusion_rounds,
-        }
     bundle = PlanBundle(
-        fingerprint=decode_fingerprint(cfg, n_slots=n_slots, max_len=max_len),
+        fingerprint=unified.fingerprint,
         graph_fingerprint=graph_fingerprint(graph),
         arch=cfg.name,
         n_slots=n_slots,
         max_len=max_len,
         dtype=cfg.dtype,
         plan=best_plan,
-        order=order,
-        fusion_groups=groups,
+        state_plan=unified.state,
+        n_layers=cfg.n_layers,
+        d_model=cfg.d_model,
+        order=unified.order,
+        fusion_groups=unified.fusion_groups,
         provenance=provenance,
     )
+    outcome = unified.search
     return CompileResult(
         bundle=bundle,
         graph=graph,
-        greedy_plan=greedy_plan,
-        order_result=order_res,
-        fusion_result=fusion_res,
+        unified=unified,
+        greedy_plan=outcome.greedy_plan if outcome is not None else best_plan,
+        order_result=outcome.order if outcome is not None else None,
+        fusion_result=outcome.fusion if outcome is not None else None,
         wall_s=time.perf_counter() - wall0,
     )
 
@@ -246,15 +239,74 @@ def compile_and_publish(
     return res
 
 
+def sweep_buckets(
+    archs: list[str],
+    out_dir: str,
+    *,
+    full: bool = False,
+    slots_list: list[int],
+    max_lens: list[int],
+    dtypes: list[str] | None = None,
+    command: str | None = None,
+    emit=print,
+    **kwargs,
+) -> list[CompileResult]:
+    """The fleet sweep behind ``--all``: every (arch × slots × max_len ×
+    dtype) bucket into ONE manifest. Audio (encoder-decoder) archs are
+    skipped — the engine drives decoder-only archs. Plans are shared
+    through one PlanCache across the sweep, so buckets differing only in
+    max_len reuse each other's strategy runs when their record sets
+    coincide."""
+    cache = kwargs.pop("cache", None) or PlanCache()
+    results: list[CompileResult] = []
+    for arch in archs:
+        base = get_config(arch) if full else get_reduced(arch)
+        if base.family == "audio":
+            emit(f"skip {arch}: audio arch (no decode-only serving path)")
+            continue
+        for dtype in dtypes or [base.dtype]:
+            cfg = (
+                base if dtype == base.dtype
+                else dataclasses.replace(base, dtype=dtype)
+            )
+            for n_slots in slots_list:
+                for max_len in max_lens:
+                    res = compile_and_publish(
+                        cfg, out_dir, n_slots=n_slots, max_len=max_len,
+                        command=command, cache=cache, **kwargs,
+                    )
+                    emit(
+                        f"{bucket_key(cfg, n_slots=n_slots, max_len=max_len)}"
+                        f": {res.bundle.total_size / 2**20:.3f} MiB unified "
+                        f"({res.wall_s:.2f}s)"
+                    )
+                    results.append(res)
+    return results
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
-        description="compile a decode-graph memory plan into a serving bundle"
+        description="compile decode-graph memory plans into serving bundles"
     )
-    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--arch", choices=ARCH_IDS,
+                    help="one arch (or use --all)")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every (arch x slots x max-len) bucket into "
+                         "one manifest; restrict archs with --archs")
+    ap.add_argument("--archs", nargs="*", choices=ARCH_IDS, default=None,
+                    help="arch subset for --all (default: every non-audio "
+                         "arch)")
     ap.add_argument("--full", action="store_true",
                     help="compile the full config (default: reduced)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--slots-list", type=int, nargs="*", default=None,
+                    help="slot counts for --all (default: --slots)")
+    ap.add_argument("--max-lens", type=int, nargs="*", default=None,
+                    help="max_len grid for --all (default: --max-len)")
+    ap.add_argument("--dtypes", nargs="*", default=None,
+                    help="dtype overrides for --all (default: each "
+                         "config's own dtype)")
     ap.add_argument("--strategy", default="auto")
     ap.add_argument("--search", action="store_true",
                     help="run the order/fusion search on the decode graph")
@@ -266,6 +318,29 @@ def main() -> None:
     ap.add_argument("--json", action="store_true",
                     help="emit a machine-readable summary line")
     args = ap.parse_args()
+    if bool(args.arch) == bool(args.all):
+        ap.error("pass exactly one of --arch or --all")
+
+    command = shlex.join(sys.argv)
+    if args.all:
+        results = sweep_buckets(
+            list(args.archs or ARCH_IDS), args.out,
+            full=args.full,
+            slots_list=args.slots_list or [args.slots],
+            max_lens=args.max_lens or [args.max_len],
+            dtypes=args.dtypes,
+            strategy=args.strategy, search=args.search,
+            search_iters=args.iters, fusion_rounds=args.fusion_rounds,
+            command=command,
+        )
+        print(f"published {len(results)} bucket(s) to {args.out}/")
+        if args.json:
+            print(json.dumps({
+                "buckets": len(results),
+                "unified_total_bytes": [r.bundle.total_size for r in results],
+                "wall_s": round(sum(r.wall_s for r in results), 3),
+            }))
+        return
 
     cfg = get_config(args.arch) if args.full else get_reduced(args.arch)
     res = compile_and_publish(
@@ -273,7 +348,7 @@ def main() -> None:
         n_slots=args.slots, max_len=args.max_len,
         strategy=args.strategy, search=args.search,
         search_iters=args.iters, fusion_rounds=args.fusion_rounds,
-        command=shlex.join(sys.argv),
+        command=command,
     )
     print(res.summary())
     print(f"published to {args.out}/ "
@@ -286,6 +361,11 @@ def main() -> None:
             "max_len": args.max_len,
             "greedy_total_bytes": res.greedy_plan.total_size,
             "bundle_total_bytes": res.bundle.plan.total_size,
+            "state_total_bytes": (
+                res.bundle.state_plan.total_size
+                if res.bundle.state_plan else None
+            ),
+            "unified_total_bytes": res.bundle.total_size,
             "searched": args.search,
             "wall_s": round(res.wall_s, 3),
         }))

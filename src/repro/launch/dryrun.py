@@ -124,7 +124,9 @@ def build_step(arch: str, shape_name: str, mesh, *, seq_parallel: bool = False):
     return (jitted, (params_shape, tok, cache_shape, pos, act)), None
 
 
-def planner_report(jitted, specs, name: str, search: bool = False) -> dict:
+def planner_report(jitted, specs, name: str, search: bool = False,
+                   state_pytree=None, n_slots: int | None = None,
+                   max_len: int = 0) -> dict:
     """Trace the step's jaxpr and run the paper's planner on it.
 
     ``trace_graph`` on the jitted callable works on ShapeDtypeStructs (no
@@ -133,6 +135,9 @@ def planner_report(jitted, specs, name: str, search: bool = False) -> dict:
     additionally runs the memory-aware order/fusion searches over the
     traced graph (each candidate plan served from the same cache) and
     reports the best searched footprint next to the default-order plan.
+    For decode steps (``state_pytree`` given) the cross-step slot/KV
+    state is laid out too, so the report carries the unified footprint —
+    the same two halves a compiled v2 bundle ships.
     """
     from repro.core.planner import plan_graph
     from repro.trace.jaxpr_liveness import trace_graph
@@ -148,6 +153,18 @@ def planner_report(jitted, specs, name: str, search: bool = False) -> dict:
         "plan_cache_hit": plan.cache_hit,
         "plan_wall_s": plan.plan_wall_s,
     }
+    if state_pytree is not None and n_slots:
+        from repro.core.unified import plan_state, state_records_from_pytree
+
+        state = plan_state(
+            state_records_from_pytree(state_pytree, n_slots=n_slots),
+            n_slots=n_slots, max_len=max_len,
+        )
+        out.update({
+            "state_total_gb": state.total_size / 1e9,
+            "state_leaves": len(state.leaves),
+            "unified_total_gb": (plan.total_size + state.total_size) / 1e9,
+        })
     if search:
         from repro.core.fusion_search import fusion_search
         from repro.core.order_search import search_order
@@ -231,8 +248,12 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
         out["xla_cost_unavailable"] = True
     if activation_plan or search:
         try:
+            decode = shape.kind == "decode"
             out.update(planner_report(
-                jitted, specs, f"{arch}-{shape_name}", search=search
+                jitted, specs, f"{arch}-{shape_name}", search=search,
+                state_pytree=specs[2] if decode else None,
+                n_slots=shape.global_batch if decode else None,
+                max_len=shape.seq_len,
             ))
         except Exception as e:  # planner failure must not sink the dry-run
             out["planner_error"] = f"{type(e).__name__}: {e}"

@@ -6,6 +6,13 @@ points at a bundle file or manifest directory (``launch/compile.py``
 output), otherwise planning at construction — submit a batch of requests,
 and print cold-start time, throughput and the memory report.
 
+A manifest directory gets **bucket auto-selection**: if the exact
+``(arch, slots, max_len, dtype)`` bucket is not compiled, the engine
+serves the nearest compiled ``max_len >= requested`` (exact slots/dtype)
+— a fleet swept with ``compile.py --all`` answers any admissible request
+with zero traces and zero planner calls. ``--exact-bucket`` turns the
+selection off.
+
 ``--compile-first`` runs the AOT compiler into the bundle directory before
 starting the engine (the one-command demo of compile→artifact→serve);
 ``--compare-cold-start`` additionally constructs a plan-at-construction
@@ -16,11 +23,14 @@ from __future__ import annotations
 
 import argparse
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
 
 from repro.configs.base import ARCH_IDS, get_config, get_reduced
+from repro.core.shared_objects import from_slot_log
+from repro.core.unified import PlanSession
 from repro.models.api import Model
 from repro.runtime.engine import InferenceEngine
 
@@ -38,6 +48,9 @@ def run(argv: list[str] | None = None) -> dict:
     ap.add_argument("--plan-bundle", default=None,
                     help="precompiled plan artifact: a bundle file or a "
                          "manifest directory from launch/compile.py")
+    ap.add_argument("--exact-bucket", action="store_true",
+                    help="disable nearest-bucket auto-selection (serve "
+                         "only an exact (slots, max_len, dtype) match)")
     ap.add_argument("--compile-first", action="store_true",
                     help="run the AOT compiler into --plan-bundle (default "
                          "plan_artifacts/) before starting the engine")
@@ -63,18 +76,30 @@ def run(argv: list[str] | None = None) -> dict:
         print(f"compiled plan bundle in {time.perf_counter() - t0:.2f}s: "
               f"{res.bundle.summary()}")
 
+    session = None
+    if bundle_dir is not None:
+        if Path(bundle_dir).is_dir():
+            session = PlanSession.from_manifest(
+                bundle_dir, nearest=not args.exact_bucket
+            )
+        else:
+            session = PlanSession.from_bundle(bundle_dir)
+
     model = Model.for_config(cfg)
     print(f"initializing {cfg.name} ({cfg.n_layers}L d={cfg.d_model})...")
     params = model.init(jax.random.PRNGKey(0))
     t0 = time.perf_counter()
     engine = InferenceEngine(
         cfg, params, n_slots=args.slots, max_len=args.max_len,
-        plan_bundle=bundle_dir,
+        session=session,
     )
     cold_start_s = time.perf_counter() - t0
     report = engine.memory_report
     print(f"--- engine cold start: {cold_start_s:.3f}s "
           f"(plan source: {report.plan_source}) ---")
+    if engine.max_len != args.max_len:
+        print(f"--- bucket auto-selection: requested max_len={args.max_len} "
+              f"-> serving the compiled len={engine.max_len} bucket ---")
     cold_start_noartifact_s = None
     if args.compare_cold_start and report.plan_source == "bundle":
         t0 = time.perf_counter()
@@ -102,8 +127,16 @@ def run(argv: list[str] | None = None) -> dict:
     for r in done[:3]:
         print(f"req {r.request_id}: waves [{r.admitted_wave},{r.finished_wave}] "
               f"tokens {r.tokens[:8]}...")
-    # slot-reuse audit: the engine's §4-style interval log
+    # slot-reuse audit: the engine's slot log IS a §4 shared-objects
+    # assignment (slots = objects, requests = tensors); from_slot_log
+    # raises if any two requests overlapped on one slot
+    audit = from_slot_log(
+        engine.slot_log, n_slots=args.slots,
+        slot_size=report.state_plan.bytes_per_slot if report.state_plan else 1,
+    )
     print(f"slot log (slot, admitted, finished, rid): {engine.slot_log}")
+    print(f"slot audit: {len(audit.assignment)} requests over "
+          f"{args.slots} slots, no interval overlap")
     return {
         "requests": len(done),
         "tokens": toks,
@@ -115,6 +148,12 @@ def run(argv: list[str] | None = None) -> dict:
         "plan_source": report.plan_source,
         "bundle_warning": report.bundle_warning,
         "plan_total_bytes": report.activation_plan.total_size,
+        "state_total_bytes": (
+            report.state_plan.total_size if report.state_plan else None
+        ),
+        "unified_total_bytes": report.unified_total_bytes,
+        "requested_max_len": args.max_len,
+        "effective_max_len": engine.max_len,
     }
 
 

@@ -7,10 +7,13 @@ the whole inference — and across inferences.
 
 The arena is deliberately decoupled from the planner: it consumes an
 :class:`ArenaLayout` (offsets + per-tensor slot sizes + total), which can
-come from a freshly computed :class:`~repro.core.planner.MemoryPlan` *or*
+come from a freshly computed :class:`~repro.core.planner.MemoryPlan`,
 straight from a precompiled :class:`~repro.core.artifact.PlanBundle`'s
-stored offsets — the serving path never needs planner objects to
-materialize its memory.
+stored offsets, or from the cross-step
+:class:`~repro.core.unified.StatePlan` (slot/KV layout) — both arenas of
+a :class:`~repro.core.unified.UnifiedPlan` materialize from that one
+object (:meth:`ArenaLayout.from_unified`). The serving path never needs
+planner objects to materialize its memory.
 """
 
 from __future__ import annotations
@@ -23,6 +26,7 @@ import numpy as np
 if TYPE_CHECKING:
     from repro.core.artifact import PlanBundle
     from repro.core.planner import MemoryPlan
+    from repro.core.unified import StatePlan, UnifiedPlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +51,27 @@ class ArenaLayout:
     def from_bundle(bundle: "PlanBundle") -> "ArenaLayout":
         """Materialize straight from a plan artifact's stored offsets."""
         return ArenaLayout.from_plan(bundle.plan)
+
+    @staticmethod
+    def from_state_plan(state: "StatePlan") -> "ArenaLayout":
+        """Cross-step state arena: one dense tensor id per (slot, leaf)
+        pair (``slot * n_leaves + leaf_index``), offsets straight from the
+        slot/KV layout's concrete offsets."""
+        offsets: dict[int, int] = {}
+        sizes: dict[int, int] = {}
+        for tid, _slot, leaf, off in state.flat_entries():
+            offsets[tid] = off
+            sizes[tid] = leaf.slot_nbytes
+        return ArenaLayout(
+            total_size=state.total_size, offsets=offsets, sizes=sizes
+        )
+
+    @staticmethod
+    def from_unified(
+        plan: "UnifiedPlan",
+    ) -> "tuple[ArenaLayout | None, ArenaLayout | None]":
+        """Both arenas from one object: (activation, cross-step state)."""
+        return plan.arena_layouts()
 
     def validate(self) -> None:
         """Every planned slot must lie inside the buffer — a corrupt or

@@ -3,21 +3,27 @@
 This is where the paper's contribution becomes a first-class framework
 feature. At engine construction we:
 
-1. obtain the activation ``MemoryPlan`` for the decode step — either
-   served from a precompiled :class:`~repro.core.artifact.PlanBundle`
-   (``plan_bundle=``: the ahead-of-time path — no jaxpr trace, no planner
-   call; the bundle's config-level fingerprint is verified against this
-   engine's bucket and mismatches fall back to planning with a one-line
-   warning in the report), or by tracing the decode step to a jaxpr
-   (``trace/jaxpr_liveness``) and planning it (paper §5, Greedy-by-Size
-   offsets with auto fallback) — reported in ``engine.memory_report`` and
-   validated against XLA's own temp allocation;
+1. obtain the :class:`~repro.core.unified.UnifiedPlan` for the serving
+   bucket from the engine's :class:`~repro.core.unified.PlanSession` —
+   ``PlanSession.from_manifest(dir)`` serves a precompiled v2
+   :class:`~repro.core.artifact.PlanBundle` covering BOTH halves
+   (activation offsets + cross-step state layout) with no jaxpr trace, no
+   planner call, and no state-layout work; bucket auto-selection picks
+   the nearest compiled ``max_len >= requested``. ``from_spec`` plans a
+   :class:`~repro.core.unified.PlanSpec` on demand (pre-searched graphs,
+   pinned strategies). Without a session — or when a bundle's fingerprint
+   does not match — the engine traces the decode step
+   (``trace/jaxpr_liveness``) and plans it (paper §5), recording a
+   one-line warning in the report;
 2. materialize the activation arena straight from the plan's offsets
-   (``engine.activation_arena`` — allocate once, serve forever);
-3. plan the CROSS-STEP state (per-slot KV caches + decode buffers) as a
-   Shared-Objects instance where ``op index == decode wave`` — slots are
-   the shared objects, requests are the tensors (paper §4 applied above
-   the XLA level, where XLA cannot help);
+   (``engine.activation_arena`` — allocate once, serve forever) and keep
+   the cross-step state layout (``engine.state_layout``) next to the jax
+   cache buffers it accounts for;
+3. lay out the CROSS-STEP state (per-slot KV caches + decode buffers) as
+   a Shared-Objects instance where ``op index == decode wave`` — slots
+   are the shared objects, requests are the tensors (paper §4 applied
+   above the XLA level, where XLA cannot help); the engine's slot log is
+   the runtime audit (``shared_objects.from_slot_log``);
 4. run continuous batching: fixed ``n_slots``, admit from queue on free,
    step all active slots each wave, retire on EOS/max_len.
 
@@ -29,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from pathlib import Path
 from typing import Any, Callable
 
@@ -37,9 +44,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.artifact import PlanBundle, decode_fingerprint, resolve_bundle
+from repro.core.artifact import PlanBundle, decode_fingerprint
 from repro.core.graph import Graph
 from repro.core.planner import MemoryPlan, plan_graph
+from repro.core.unified import (
+    PlanSession,
+    PlanSpec,
+    StatePlan,
+    UnifiedPlan,
+    plan_state,
+    state_records_from_pytree,
+)
 from repro.models import transformer
 from repro.models.api import Model
 from repro.runtime.arena import Arena, ArenaLayout
@@ -67,18 +82,29 @@ class MemoryReport:
     # (repeat engine construction over an unchanged decode graph)
     plan_cache_hit: bool = False
     # where the plan came from: "bundle" (precompiled artifact, zero
-    # trace/plan work), "cache" (plan cache hit), or "planned"
+    # trace/plan work for both halves), "cache" (plan cache hit), or
+    # "planned"
     plan_source: str = "planned"
     # one-line reason when a requested bundle could not be used and the
     # engine fell back to plan-at-construction
     bundle_warning: str | None = None
+    # cross-step slot/KV layout (the other half of the unified plan)
+    state_plan: StatePlan | None = None
+
+    @property
+    def unified_total_bytes(self) -> int:
+        return self.activation_plan.total_size + (
+            self.state_plan.total_size if self.state_plan is not None else 0
+        )
 
     def summary(self) -> str:
         lines = [self.activation_plan.summary()]
         if self.bundle_warning:
             lines.append(f"WARNING: {self.bundle_warning}")
         if self.plan_source == "bundle":
-            lines.append("activation plan served from a precompiled bundle")
+            lines.append(
+                "activation + state plans served from a precompiled bundle"
+            )
         elif self.plan_cache_hit:
             lines.append("activation plan served from the plan cache")
         if self.xla_temp_bytes is not None:
@@ -86,11 +112,69 @@ class MemoryReport:
                 f"XLA temp allocation for the same step: "
                 f"{self.xla_temp_bytes / 2**20:.3f} MiB"
             )
+        if self.state_plan is not None:
+            lines.append(self.state_plan.summary())
+            lines.append(
+                f"unified footprint (activation + state): "
+                f"{self.unified_total_bytes / 2**20:.3f} MiB"
+            )
         lines.append(
             f"KV/state cache: {self.cache_bytes_per_slot / 2**20:.3f} MiB/slot "
             f"x {self.n_slots} slots"
         )
         return "\n".join(lines)
+
+
+def _session_from_legacy_kwargs(
+    session: PlanSession | None,
+    *,
+    plan_strategy: str | None,
+    activation_graph: Graph | None,
+    plan_bundle: PlanBundle | str | Path | None,
+    verify_bundle: bool | None,
+) -> PlanSession | None:
+    """Deprecated-kwarg shim: the pre-unified plan-source kwargs map onto
+    a PlanSession. ``plan_bundle`` keeps its historical exact-bucket
+    semantics (``nearest=False``); new callers get auto-selection through
+    ``PlanSession.from_manifest``."""
+    # explicitly-passed OLD DEFAULTS are semantic no-ops, not deprecated
+    # usage — callers migrating incrementally must be able to combine
+    # them with session= (the downstream spec/verify defaults reproduce
+    # them exactly)
+    if plan_strategy == "auto":
+        plan_strategy = None
+    if verify_bundle is False:
+        verify_bundle = None
+    legacy = {
+        "plan_strategy": plan_strategy,
+        "activation_graph": activation_graph,
+        "plan_bundle": plan_bundle,
+        "verify_bundle": verify_bundle,
+    }
+    used = [k for k, v in legacy.items() if v is not None]
+    if not used:
+        return session
+    if session is not None:
+        raise ValueError(
+            f"pass either session= or the deprecated {used} kwargs, not both"
+        )
+    warnings.warn(
+        f"InferenceEngine({', '.join(used)}=...) is deprecated; pass "
+        f"session=PlanSession.from_manifest(dir) / .from_bundle(b) / "
+        f".from_spec(PlanSpec(...)) instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+    verify = bool(verify_bundle)
+    if plan_bundle is not None:
+        if not isinstance(plan_bundle, PlanBundle) and Path(plan_bundle).is_dir():
+            return PlanSession.from_manifest(
+                plan_bundle, nearest=False, verify_graph=verify
+            )
+        return PlanSession.from_bundle(plan_bundle, verify_graph=verify)
+    return PlanSession.from_spec(
+        PlanSpec(graph=activation_graph, strategy=plan_strategy or "auto")
+    )
 
 
 class InferenceEngine:
@@ -101,28 +185,53 @@ class InferenceEngine:
         *,
         n_slots: int = 4,
         max_len: int = 256,
-        plan_strategy: str = "auto",
+        session: PlanSession | None = None,
         greedy: bool = True,
         sample_seed: int | None = 0,
+        # deprecated plan-source kwargs — use session=PlanSession...
+        plan_strategy: str | None = None,
         activation_graph: Graph | None = None,
         plan_bundle: PlanBundle | str | Path | None = None,
-        verify_bundle: bool = False,
+        verify_bundle: bool | None = None,
     ):
         if cfg.family == "audio":
             raise NotImplementedError("engine drives decoder-only archs")
+        session = _session_from_legacy_kwargs(
+            session,
+            plan_strategy=plan_strategy,
+            activation_graph=activation_graph,
+            plan_bundle=plan_bundle,
+            verify_bundle=verify_bundle,
+        )
         self.cfg = cfg
         self.model = Model.for_config(cfg)
         self.params = params
         self.n_slots = n_slots
-        self.max_len = max_len
         self.greedy = greedy
+        self.session = session
         # ONE engine-owned generator: a per-slot default_rng(self._wave)
         # gave every slot in a wave the same seed, so slots with identical
         # logits always emitted identical tokens and reruns were trivially
         # correlated
         self._sampler = np.random.default_rng(sample_seed)
 
-        self.caches = self.model.init_cache(n_slots, max_len)
+        # --- the unified plan for this serving bucket -------------------
+        # The session is the single plan source: a precompiled v2 bundle
+        # carries BOTH halves (activation offsets + cross-step state
+        # layout) behind one fingerprint check — no jaxpr trace, no
+        # planner call, no state-layout work, no XLA memory-analysis
+        # compile. Nearest-bucket selection may hand back a larger
+        # compiled max_len than requested; the engine serves that bucket.
+        # Any mismatch or load failure falls back to plan-at-construction
+        # with a one-line warning.
+        resolution = (
+            session.resolve(cfg, n_slots=n_slots, max_len=max_len)
+            if session is not None
+            else None
+        )
+        self.max_len = resolution.max_len if resolution is not None else max_len
+
+        self.caches = self.model.init_cache(n_slots, self.max_len)
         self._reset = jax.jit(lambda c, keep: self.model.reset_slots(c, keep))
         self._decode = jax.jit(
             lambda p, t, c, pos, act: self.model.decode_step(
@@ -130,23 +239,14 @@ class InferenceEngine:
             )
         )
 
-        # --- the paper's planner on the decode step ---------------------
-        # Ahead-of-time path first: a precompiled PlanBundle
-        # (launch/compile.py) already carries the plan for this exact
-        # (config, n_slots, max_len) bucket. Verifying its cheap
-        # config-level fingerprint costs microseconds; on a match the
-        # engine performs NO jaxpr trace, NO planner call, and skips the
-        # XLA memory-analysis compile — the cold-start win the artifact
-        # pipeline exists for. Any mismatch or load failure falls back to
-        # today's plan-at-construction path with a one-line warning.
-        bundle: PlanBundle | None = None
-        bundle_warning: str | None = None
-        if plan_bundle is not None:
-            bundle, bundle_warning = self._load_bundle(plan_bundle)
+        bundle = resolution.bundle if resolution is not None else None
+        unified = resolution.unified if resolution is not None else None
+        bundle_warning = resolution.warning if resolution is not None else None
+        spec = resolution.spec if resolution is not None else None
         tok0 = jnp.zeros((n_slots, 1), jnp.int32)
         pos0 = jnp.zeros((n_slots,), jnp.int32)
         act0 = jnp.ones((n_slots,), bool)
-        if bundle is not None and verify_bundle:
+        if bundle is not None and session is not None and session.verify_graph:
             # trace-backed verification: the config fingerprint cannot see
             # model-code changes (only a PIPELINE_REVISION bump can), so a
             # paranoid caller trades the zero-trace cold start for a
@@ -168,23 +268,38 @@ class InferenceEngine:
                     f"planned at construction instead"
                 )
                 bundle = None
+                unified = None
+
         xla_temp: int | None = None
-        if bundle is not None:
-            plan = bundle.plan
-            plan_source = "bundle"
-            xla_temp = bundle.provenance.get("xla_temp_bytes")
+        if unified is not None and unified.activation is not None:
+            plan = unified.activation
+            if bundle is not None:
+                plan_source = "bundle"
+                xla_temp = bundle.provenance.get("xla_temp_bytes")
+            else:
+                plan_source = "cache" if plan.cache_hit else "planned"
         else:
-            # a pre-searched graph (core/order_search, core/fusion_search)
-            # can be planned directly instead of tracing the default-order
-            # step
-            graph = activation_graph if activation_graph is not None else trace_graph(
-                lambda p, t, c, pos, act: self.model.decode_step(
-                    p, t, c, pos, active=act
-                ),
-                params, tok0, self.caches, pos0, act0, name=f"{cfg.name}-decode",
+            # fallback half: a pre-searched graph (core/order_search,
+            # core/fusion_search) from the spec can be planned directly
+            # instead of tracing the default-order step
+            graph = (
+                spec.graph
+                if spec is not None and spec.graph is not None
+                else trace_graph(
+                    lambda p, t, c, pos, act: self.model.decode_step(
+                        p, t, c, pos, active=act
+                    ),
+                    params, tok0, self.caches, pos0, act0,
+                    name=f"{cfg.name}-decode",
+                )
             )
-            plan = plan_graph(graph, mode="offsets", strategy=plan_strategy)
+            strategy = spec.strategy if spec is not None else "auto"
+            plan = plan_graph(graph, mode="offsets", strategy=strategy)
             plan_source = "cache" if plan.cache_hit else "planned"
+        if bundle is None and xla_temp is None:
+            # planned-vs-XLA validation line: only a bundle carries the
+            # measurement precomputed; every other plan source (trace,
+            # spec-planned searched graph) measures it here
             try:
                 compiled = (
                     self._decode.lower(params, tok0, self.caches, pos0, act0)
@@ -194,10 +309,38 @@ class InferenceEngine:
                 xla_temp = int(getattr(ma, "temp_size_in_bytes", 0)) or None
             except Exception:
                 pass
+
+        # cross-step half: a v2 bundle ships the slot/KV layout; anything
+        # else lays it out from the engine's own cache pytree (cheap, but
+        # counted — unified.STATE_PLAN_CALLS — so tests can pin the
+        # bundle path to zero work here too)
+        if unified is not None and unified.state is not None:
+            state_plan = unified.state
+        else:
+            state_plan = plan_state(
+                state_records_from_pytree(self.caches, n_slots=n_slots),
+                n_slots=n_slots,
+                max_len=self.max_len,
+            )
+        self.unified_plan = UnifiedPlan(
+            activation=plan,
+            state=state_plan,
+            fingerprint=(
+                unified.fingerprint
+                if unified is not None
+                else decode_fingerprint(
+                    cfg, n_slots=n_slots, max_len=self.max_len
+                )
+            ),
+        )
+
         self.plan_bundle = bundle
-        # allocate-once deployment: the arena comes straight from the
-        # stored offsets (no planner objects needed on the bundle path)
-        self.activation_arena = Arena(ArenaLayout.from_plan(plan))
+        # allocate-once deployment: BOTH layouts come from the one unified
+        # plan; the activation arena is materialized (the decode step's
+        # scratch bytes), the state layout stays an accounting view over
+        # the jax cache buffers the engine already owns
+        act_layout, self.state_layout = self.unified_plan.arena_layouts()
+        self.activation_arena = Arena(act_layout)
         cache_bytes = sum(
             np.prod(x.shape) * x.dtype.itemsize
             for x in jax.tree_util.tree_leaves(self.caches)
@@ -210,6 +353,7 @@ class InferenceEngine:
             plan_cache_hit=plan.cache_hit,
             plan_source=plan_source,
             bundle_warning=bundle_warning,
+            state_plan=state_plan,
         )
 
         # serving state — per-slot positions (continuous batching: every
@@ -223,33 +367,6 @@ class InferenceEngine:
         # (slot, first_wave, last_wave, request_id)
         self.slot_log: list[tuple[int, int, int, int]] = []
         self._next_rid = 0
-
-    def _load_bundle(
-        self, source: PlanBundle | str | Path
-    ) -> tuple[PlanBundle | None, str | None]:
-        """Resolve + fingerprint-check a plan bundle. Returns
-        ``(bundle, None)`` on success, ``(None, warning)`` on any failure —
-        a bad artifact degrades to plan-at-construction, never crashes
-        serving (hence the deliberately broad except: whatever a corrupt
-        or adversarially malformed document raises, serving proceeds)."""
-        try:
-            bundle = resolve_bundle(
-                source, self.cfg, n_slots=self.n_slots, max_len=self.max_len
-            )
-        except Exception as e:
-            return None, (
-                f"plan bundle unusable ({e}); planned at construction instead"
-            )
-        expect = decode_fingerprint(
-            self.cfg, n_slots=self.n_slots, max_len=self.max_len
-        )
-        if bundle.fingerprint != expect:
-            return None, (
-                f"plan bundle fingerprint mismatch (bundle "
-                f"{str(bundle.fingerprint)[:12]}, engine {expect[:12]}); "
-                f"planned at construction instead"
-            )
-        return bundle, None
 
     # ------------------------------------------------------------ admin
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:

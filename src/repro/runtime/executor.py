@@ -20,8 +20,10 @@ import jax
 import numpy as np
 from jax.extend.core import Literal
 
+from repro.core import plan_io
 from repro.core.graph import Graph
 from repro.core.planner import MemoryPlan, plan_graph
+from repro.core.unified import UnifiedPlan
 from repro.runtime.arena import Arena, ArenaLayout
 from repro.trace.jaxpr_liveness import _INLINE, _sub_closed_jaxpr, graph_from_jaxpr
 
@@ -46,23 +48,20 @@ class ArenaExecutor:
         *example_args,
         strategy: str = "auto",
         alignment: int = 64,
-        plan: MemoryPlan | None = None,
+        plan: "MemoryPlan | UnifiedPlan | None" = None,
     ):
         self.closed = jax.make_jaxpr(fn)(*example_args)
         self.graph: Graph = graph_from_jaxpr(
             self.closed, name=getattr(fn, "__name__", "fn"),
             inline_nested=True, expand_scan=False,
         )
+        if isinstance(plan, UnifiedPlan):
+            plan = plan.activation  # the executor runs the activation half
         if plan is not None:
             # a precompiled plan (e.g. out of a PlanBundle) skips the
             # planner — but only if it covers exactly this graph's records;
             # a stale artifact here would mean silent memory corruption
-            def canon(records):
-                return sorted(
-                    (r.tensor_id, r.first_op, r.last_op, r.size)
-                    for r in records
-                )
-
+            canon = plan_io.canonical_records
             if canon(plan.records) != canon(
                 self.graph.usage_records(alignment)
             ):

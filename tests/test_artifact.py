@@ -3,12 +3,18 @@
 The artifact layer is the contract between the offline compiler and every
 future serving process, so these tests pin the properties serving relies
 on: byte-determinism (content addressing must be stable across
-recompiles), version rejection (loaders never guess), fingerprint
-sensitivity (any graph-shaping change re-keys), and manifest dedup.
+recompiles), version gating (v1 loads through a one-warning shim, newer
+versions are rejected), fingerprint sensitivity (any graph-shaping change
+re-keys), manifest dedup, corrupt-index quarantine + rebuild, bucket
+auto-selection (``lookup_nearest``), and lost-update safety of concurrent
+``publish()``.
 """
 
 import dataclasses
 import json
+import multiprocessing
+import warnings
+from concurrent.futures import ProcessPoolExecutor
 
 import pytest
 
@@ -18,6 +24,7 @@ from repro.core.artifact import (
     BundleManifest,
     PlanBundle,
     bucket_key,
+    bundle_bucket_key,
     bundle_from_json,
     bundle_from_obj,
     bundle_to_json,
@@ -25,11 +32,14 @@ from repro.core.artifact import (
     decode_fingerprint,
     graph_fingerprint,
     load_bundle,
+    parse_bucket_key,
     resolve_bundle,
     save_bundle,
+    unified_from_bundle,
 )
 from repro.core.graph import GraphBuilder
 from repro.core.planner import plan_records
+from repro.core.unified import StateRecord, plan_state
 
 
 def _small_graph(scale: int = 1):
@@ -40,6 +50,19 @@ def _small_graph(scale: int = 1):
     out = b.op("proj", [g, h], (4 * scale, 2))
     b.mark_output(out)
     return b.build()
+
+
+def _state_plan(n_slots=2, max_len=64):
+    return plan_state(
+        [
+            StateRecord(path="['kv']", shape=(n_slots, 8), dtype="float32",
+                        nbytes=n_slots * 8 * 4),
+            StateRecord(path="['ssm']", shape=(n_slots, 4), dtype="float32",
+                        nbytes=n_slots * 4 * 4),
+        ],
+        n_slots=n_slots,
+        max_len=max_len,
+    )
 
 
 def _bundle(cfg=None, n_slots=2, max_len=64, **overrides) -> PlanBundle:
@@ -56,6 +79,9 @@ def _bundle(cfg=None, n_slots=2, max_len=64, **overrides) -> PlanBundle:
         max_len=max_len,
         dtype=cfg.dtype,
         plan=plan,
+        state_plan=_state_plan(n_slots=n_slots, max_len=max_len),
+        n_layers=cfg.n_layers,
+        d_model=cfg.d_model,
         order=[0, 2, 1],
         fusion_groups=[[0], [1, 2]],
         provenance={"tool": "test", "greedy_total_bytes": plan.total_size},
@@ -88,6 +114,51 @@ def test_bundle_rejects_unknown_version():
     obj["format_version"] = BUNDLE_FORMAT_VERSION + 1
     with pytest.raises(ValueError, match="format version"):
         bundle_from_obj(obj)
+
+
+def test_bundle_v2_round_trips_unified_plan():
+    """Acceptance: a v2 bundle round-trips a UnifiedPlan — activation
+    offsets + cross-step state offsets — byte-deterministically."""
+    b = _bundle()
+    text = bundle_to_json(b)
+    b2 = bundle_from_json(text)
+    assert bundle_to_json(b2) == text  # byte-deterministic round trip
+    up = unified_from_bundle(b2)
+    assert up.fingerprint == b.fingerprint
+    assert up.activation.offsets == b.plan.offsets
+    assert up.state == b.state_plan
+    assert up.total_size == b.plan.total_size + b.state_plan.total_size
+    assert up.total_size == b.total_size
+    assert "unified" in b.summary()
+
+
+def test_bundle_v1_loads_through_shim_with_warning():
+    """v1 documents (no state plan, no bucket shape fields) still load —
+    one DeprecationWarning, ``state_plan=None`` — and their fingerprints
+    hashed format v1, so a v2 engine never serves them (fallback
+    semantics preserved; exercised end-to-end in test_serve)."""
+    obj = bundle_to_obj(_bundle())
+    obj["format_version"] = 1
+    for key in ("state_plan", "n_layers", "d_model"):
+        del obj[key]
+    with pytest.deprecated_call(match="format v1"):
+        b = bundle_from_obj(json.loads(json.dumps(obj)))
+    assert b.state_plan is None
+    assert b.n_layers == 0 and b.d_model == 0
+    assert bundle_bucket_key(b) is None  # shape fields unknown
+    assert unified_from_bundle(b).state is None
+
+
+def test_bucket_key_parses_and_rebuilds():
+    cfg = get_reduced("qwen3-0.6b")
+    key = bucket_key(cfg, n_slots=2, max_len=64)
+    parsed = parse_bucket_key(key)
+    assert parsed == {
+        "arch": cfg.name, "n_layers": cfg.n_layers, "d_model": cfg.d_model,
+        "n_slots": 2, "max_len": 64, "dtype": cfg.dtype,
+    }
+    assert parse_bucket_key("free-form-key") is None
+    assert bundle_bucket_key(_bundle(cfg)) == key
 
 
 def test_decode_fingerprint_covers_graph_shaping_inputs():
@@ -135,12 +206,123 @@ def test_manifest_publish_lookup_and_dedup(tmp_path):
     assert entries[key]["command"] == "pytest"
 
 
-def test_manifest_rejects_unknown_version(tmp_path):
+def test_manifest_corruption_is_quarantined_and_rebuilt(tmp_path):
+    """A truncated/garbage manifest.json must not crash publish(): the
+    index is quarantined (.corrupt-<ts>) and rebuilt from the
+    bundle-*.json files on disk (v2 bundles carry their bucket shape
+    fields for exactly this)."""
+    cfg = get_reduced("qwen3-0.6b")
+    man = BundleManifest(tmp_path)
+    k64 = bucket_key(cfg, n_slots=2, max_len=64)
+    k128 = bucket_key(cfg, n_slots=2, max_len=128)
+    b64 = _bundle(cfg, n_slots=2, max_len=64)
+    b128 = _bundle(cfg, n_slots=2, max_len=128)
+    man.publish(k64, b64, command="pytest")
+    man.publish(k128, b128, command="pytest")
+
+    for garbage in ('{"format_version": 1, "buck', "[]", '"not an index"'):
+        (tmp_path / "manifest.json").write_text(garbage)
+        with pytest.warns(RuntimeWarning, match="rebuilt 2 bucket"):
+            buckets = man.buckets()
+        assert set(buckets) == {k64, k128}
+        assert buckets[k64]["fingerprint"] == b64.fingerprint
+    # the corrupt files were quarantined, not deleted
+    assert list(tmp_path.glob("manifest.json.corrupt-*"))
+    # and a subsequent publish works on the rebuilt index
+    k32 = bucket_key(cfg, n_slots=2, max_len=32)
+    man.publish(k32, _bundle(cfg, n_slots=2, max_len=32))
+    assert set(man.buckets()) == {k32, k64, k128}
+    # lookups round-trip through the rebuilt index
+    got = man.lookup(k128)
+    assert bundle_to_obj(got) == bundle_to_obj(b128)
+
+
+def test_manifest_rejects_newer_index_version(tmp_path):
     (tmp_path / "manifest.json").write_text(
         json.dumps({"format_version": 99, "buckets": {}})
     )
     with pytest.raises(ValueError, match="format version"):
         BundleManifest(tmp_path).buckets()
+
+
+def test_lookup_nearest_picks_smallest_admissible_max_len(tmp_path):
+    cfg = get_reduced("qwen3-0.6b")
+    man = BundleManifest(tmp_path)
+    for max_len in (64, 128, 256):
+        man.publish(
+            bucket_key(cfg, n_slots=2, max_len=max_len),
+            _bundle(cfg, n_slots=2, max_len=max_len),
+        )
+    # exact hit wins
+    key, b = man.lookup_nearest(cfg, n_slots=2, max_len=128)
+    assert b.max_len == 128 and key.endswith("len128|" + cfg.dtype)
+    # no exact bucket: nearest compiled max_len >= requested
+    key, b = man.lookup_nearest(cfg, n_slots=2, max_len=96)
+    assert b.max_len == 128
+    key, b = man.lookup_nearest(cfg, n_slots=2, max_len=32)
+    assert b.max_len == 64
+    # nothing admissible: longer than every compiled bucket
+    assert man.lookup_nearest(cfg, n_slots=2, max_len=512) is None
+    # slots must match exactly — no cross-slot substitution
+    assert man.lookup_nearest(cfg, n_slots=4, max_len=64) is None
+    # dtype must match exactly
+    other = dataclasses.replace(cfg, dtype="bfloat16")
+    assert man.lookup_nearest(other, n_slots=2, max_len=64) is None
+
+
+def test_resolve_bundle_miss_lists_compiled_buckets(tmp_path):
+    """Satellite: a manifest miss is a readable message naming the buckets
+    that DO exist, not a silent fallback one-liner."""
+    cfg = get_reduced("qwen3-0.6b")
+    man = BundleManifest(tmp_path)
+    k64 = bucket_key(cfg, n_slots=2, max_len=64)
+    man.publish(k64, _bundle(cfg, n_slots=2, max_len=64))
+    with pytest.raises(FileNotFoundError) as exc:
+        resolve_bundle(tmp_path, cfg, n_slots=8, max_len=64)
+    assert k64 in str(exc.value)
+    assert "compiled buckets" in str(exc.value)
+    # nearest mode: same readable miss when nothing is admissible
+    with pytest.raises(FileNotFoundError) as exc:
+        resolve_bundle(tmp_path, cfg, n_slots=2, max_len=512, nearest=True)
+    assert k64 in str(exc.value)
+    # empty manifests say so
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    with pytest.raises(FileNotFoundError, match="manifest is empty"):
+        resolve_bundle(empty, cfg, n_slots=2, max_len=64)
+
+
+def _publish_one(args):
+    """Worker for the concurrent-publish test (module-level: picklable)."""
+    directory, max_len = args
+    cfg = get_reduced("qwen3-0.6b")
+    bundle = _bundle(cfg, n_slots=2, max_len=max_len)
+    BundleManifest(directory).publish(
+        bucket_key(cfg, n_slots=2, max_len=max_len), bundle, command="worker"
+    )
+    return max_len
+
+
+def test_concurrent_publish_keeps_every_bucket(tmp_path):
+    """Satellite: N processes publishing distinct buckets into ONE
+    manifest (the flock'd read-modify-write) must not drop each other's
+    entries — the fleet-sweep failure mode the lock exists for."""
+    cfg = get_reduced("qwen3-0.6b")
+    max_lens = [32, 48, 64, 96, 128, 192, 256, 384]
+    # spawn, not fork: the test session has imported jax, whose thread
+    # pools make forked children deadlock-prone
+    with ProcessPoolExecutor(
+        max_workers=4, mp_context=multiprocessing.get_context("spawn")
+    ) as pool:
+        done = list(pool.map(_publish_one, [(str(tmp_path), m) for m in max_lens]))
+    assert sorted(done) == max_lens
+    buckets = BundleManifest(tmp_path).buckets()
+    expected = {bucket_key(cfg, n_slots=2, max_len=m) for m in max_lens}
+    assert expected <= set(buckets)
+    for key in expected:
+        entry = buckets[key]
+        assert (tmp_path / entry["file"]).exists()
+        assert entry["command"] == "worker"
 
 
 def test_resolve_bundle_accepts_bundle_file_and_dir(tmp_path):

@@ -122,12 +122,14 @@ def test_sampling_slots_with_identical_logits_can_diverge():
 
 
 def test_engine_accepts_pre_searched_graph():
-    """The outer search hands the engine a reordered/fused graph; the
-    engine plans it instead of the default-order trace (decode outputs are
-    unchanged — the plan is a memory artifact, not an executor)."""
+    """The outer search hands the engine a reordered/fused graph through
+    ``PlanSession.from_spec``; the engine plans it instead of the
+    default-order trace (decode outputs are unchanged — the plan is a
+    memory artifact, not an executor)."""
     import jax.numpy as jnp
 
     from repro.core.fusion_search import fusion_search
+    from repro.core.unified import PlanSession, PlanSpec
     from repro.trace.jaxpr_liveness import trace_graph
 
     cfg = get_reduced("qwen3-0.6b")
@@ -145,8 +147,10 @@ def test_engine_accepts_pre_searched_graph():
         name=f"{cfg.name}-decode",
     )
     searched = fusion_search(graph)
-    engine = InferenceEngine(cfg, params, n_slots=n_slots, max_len=max_len,
-                             activation_graph=searched.graph)
+    engine = InferenceEngine(
+        cfg, params, n_slots=n_slots, max_len=max_len,
+        session=PlanSession.from_spec(PlanSpec(graph=searched.graph)),
+    )
     plan = engine.memory_report.activation_plan
     assert plan.total_size == searched.plan.total_size
     assert plan.total_size <= searched.baseline_plan.total_size
@@ -154,6 +158,28 @@ def test_engine_accepts_pre_searched_graph():
     engine.submit(np.arange(4, dtype=np.int32), max_new_tokens=3)
     done = engine.run_until_done()
     assert len(done) == 1 and len(done[0].tokens) == 3
+
+
+def test_legacy_plan_source_kwargs_warn():
+    """The pre-unified kwargs keep working behind a DeprecationWarning
+    (the shim maps them onto a PlanSession)."""
+    from repro.core.unified import PlanSession, PlanSpec
+
+    cfg = get_reduced("qwen3-0.6b")
+    model = Model.for_config(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.deprecated_call(match="session=PlanSession"):
+        legacy = InferenceEngine(cfg, params, n_slots=2, max_len=32,
+                                 plan_strategy="greedy_by_size")
+    new = InferenceEngine(
+        cfg, params, n_slots=2, max_len=32,
+        session=PlanSession.from_spec(PlanSpec(strategy="greedy_by_size")),
+    )
+    assert (
+        legacy.memory_report.activation_plan.strategy
+        == new.memory_report.activation_plan.strategy
+        == "greedy_by_size"
+    )
 
 
 def test_engine_memory_report():
@@ -171,3 +197,17 @@ def test_engine_memory_report():
     assert plan.reduction_vs_naive > 1.25, plan.summary()
     assert rep.cache_bytes_per_slot > 0
     assert "MiB" in rep.summary()
+    # the unified report: the cross-step half is always planned, its slot
+    # regions cover the measured per-slot cache bytes, and the engine's
+    # state layout is a valid arena view over it
+    assert rep.state_plan is not None
+    assert rep.state_plan.n_slots == 2
+    assert rep.state_plan.bytes_per_slot >= rep.cache_bytes_per_slot
+    assert rep.unified_total_bytes == (
+        plan.total_size + rep.state_plan.total_size
+    )
+    assert "unified footprint" in rep.summary()
+    engine.state_layout.validate()
+    assert engine.state_layout.total_size == rep.state_plan.total_size
+    assert engine.unified_plan.activation is plan
+    assert engine.unified_plan.state is rep.state_plan

@@ -1,15 +1,19 @@
 """End-to-end tests for the compile→artifact→serve pipeline.
 
-Covers the two halves the PR joins:
-* ``launch/serve.py`` — previously the only launch driver with no test —
-  gets an end-to-end smoke on a reduced config (submit → run_until_done →
-  token counts + slot-reuse audit);
-* the plan-artifact path: engine construction from a ``PlanBundle`` must
-  perform NO jaxpr trace and NO planner call (asserted via the
-  instrumentation counters), must produce a byte-identical ``MemoryPlan``
-  to the plan-at-construction path, and must degrade gracefully (one-line
-  warning, plan-at-construction fallback) on fingerprint mismatch or a
-  corrupt artifact.
+Covers the serving side of the unified planning API:
+* ``launch/serve.py`` — end-to-end smoke on a reduced config (submit →
+  run_until_done → token counts + slot-reuse audit) plus bucket
+  auto-selection against a multi-bucket manifest;
+* the plan-artifact path: engine construction from a v2 ``PlanBundle``
+  (through ``PlanSession``) must perform NO jaxpr trace, NO planner call,
+  and NO cross-step state layout (asserted via the instrumentation
+  counters — both halves ship in the bundle), must produce a
+  byte-identical ``MemoryPlan`` to the plan-at-construction path, and
+  must degrade gracefully (one-line warning, plan-at-construction
+  fallback) on fingerprint mismatch, a corrupt artifact, or a v1 bundle
+  read by this v2 engine;
+* the deprecated plan-source kwargs, which must keep working behind a
+  ``DeprecationWarning``.
 """
 
 import dataclasses
@@ -20,10 +24,12 @@ import numpy as np
 import pytest
 
 import repro.core.planner as planner
+import repro.core.unified as unified
 import repro.trace.jaxpr_liveness as tracer
 from repro.configs.base import get_reduced
 from repro.core import plan_io
-from repro.core.artifact import bucket_key
+from repro.core.artifact import bucket_key, bundle_to_obj
+from repro.core.unified import PlanSession
 from repro.launch import serve
 from repro.launch.compile import compile_and_publish
 from repro.models.api import Model
@@ -31,6 +37,10 @@ from repro.runtime.engine import InferenceEngine
 
 ARCH = "qwen3-0.6b"
 N_SLOTS, MAX_LEN = 2, 48
+
+
+def _counters():
+    return tracer.TRACE_CALLS, planner.PLAN_CALLS, unified.STATE_PLAN_CALLS
 
 
 @pytest.fixture(scope="module")
@@ -65,18 +75,20 @@ def test_serve_end_to_end_smoke():
     assert all(len(t) == 4 for t in stats["tokens_per_request"].values())
     assert stats["plan_source"] in ("planned", "cache")
     assert stats["cold_start_s"] > 0
+    # unified accounting is part of the driver's report now
+    assert stats["state_total_bytes"] > 0
+    assert stats["unified_total_bytes"] == (
+        stats["plan_total_bytes"] + stats["state_total_bytes"]
+    )
     # slot-reuse audit: 5 requests over 2 slots must reuse slots, and no
-    # two requests may overlap on one slot (the §4 invariant)
+    # two requests may overlap on one slot (the §4 invariant). serve.run
+    # itself audits via shared_objects.from_slot_log (raises on overlap).
     log = stats["slot_log"]
     assert len(log) == 5
     by_slot: dict[int, list[tuple[int, int]]] = {}
     for slot, first, last, _rid in log:
         by_slot.setdefault(slot, []).append((first, last))
     assert any(len(v) > 1 for v in by_slot.values())
-    for ivals in by_slot.values():
-        ivals.sort()
-        for (f1, l1), (f2, l2) in zip(ivals, ivals[1:]):
-            assert l1 <= f2, f"slot intervals {ivals} overlap"
 
 
 def test_serve_from_bundle_dir(bundle_dir):
@@ -89,6 +101,39 @@ def test_serve_from_bundle_dir(bundle_dir):
     assert stats["bundle_warning"] is None
     assert stats["tokens"] == 3 * 3
     assert stats["cold_start_noartifact_s"] is not None
+    assert stats["effective_max_len"] == MAX_LEN
+
+
+def test_serve_auto_selects_nearest_bucket(cfg, tmp_path):
+    """Acceptance: a multi-bucket manifest serves a request whose max_len
+    has NO exact compiled match from the nearest compiled bucket — with
+    zero traces, zero planner calls, and zero state layouts."""
+    for max_len in (64, 128):
+        compile_and_publish(
+            cfg, tmp_path, n_slots=N_SLOTS, max_len=max_len, command="pytest"
+        )
+    before = _counters()
+    stats = serve.run([
+        "--arch", ARCH, "--requests", "2", "--prompt-len", "3",
+        "--max-new", "2", "--slots", str(N_SLOTS), "--max-len", "96",
+        "--plan-bundle", str(tmp_path),
+    ])
+    assert _counters() == before, (
+        "bucket auto-selection traced/planned/laid out state"
+    )
+    assert stats["plan_source"] == "bundle"
+    assert stats["requested_max_len"] == 96
+    assert stats["effective_max_len"] == 128  # nearest compiled >= 96
+    assert stats["tokens"] == 2 * 2
+    # --exact-bucket turns selection off: miss -> fallback with the
+    # readable bucket listing
+    stats = serve.run([
+        "--arch", ARCH, "--requests", "1", "--prompt-len", "3",
+        "--max-new", "2", "--slots", str(N_SLOTS), "--max-len", "96",
+        "--plan-bundle", str(tmp_path), "--exact-bucket",
+    ])
+    assert stats["plan_source"] in ("planned", "cache")
+    assert "compiled buckets" in stats["bundle_warning"]
 
 
 def test_serve_compile_first(tmp_path):
@@ -105,25 +150,38 @@ def test_serve_compile_first(tmp_path):
 # ------------------------------------------------------ artifact serving
 
 
-def test_engine_from_bundle_no_trace_no_plan(cfg, params, bundle_dir):
-    traces0, plans0 = tracer.TRACE_CALLS, planner.PLAN_CALLS
+def test_engine_from_bundle_no_trace_no_plan_no_state_layout(
+    cfg, params, bundle_dir
+):
+    before = _counters()
     engine = InferenceEngine(
-        cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN, plan_bundle=bundle_dir
+        cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+        session=PlanSession.from_manifest(bundle_dir),
     )
-    assert tracer.TRACE_CALLS == traces0, "bundle path traced a jaxpr"
-    assert planner.PLAN_CALLS == plans0, "bundle path invoked the planner"
+    traces, plans, states = _counters()
+    assert traces == before[0], "bundle path traced a jaxpr"
+    assert plans == before[1], "bundle path invoked the planner"
+    assert states == before[2], "bundle path laid out the cross-step state"
     rep = engine.memory_report
     assert rep.plan_source == "bundle"
     assert rep.bundle_warning is None
     assert "precompiled bundle" in rep.summary()
     assert engine.plan_bundle is not None
-    # the arena is materialized straight from the stored offsets
+    # BOTH halves came from the artifact
+    assert rep.state_plan is not None
+    assert rep.state_plan == engine.plan_bundle.state_plan
+    assert engine.unified_plan.total_size == engine.plan_bundle.total_size
+    # the arena is materialized straight from the stored offsets, and the
+    # state layout from the stored slot/KV plan
     assert engine.activation_arena.nbytes == max(rep.activation_plan.total_size, 1)
+    engine.state_layout.validate()
+    assert engine.state_layout.total_size == rep.state_plan.total_size
 
 
 def test_bundle_plan_byte_identical_to_construction_plan(cfg, params, bundle_dir):
     eng_b = InferenceEngine(
-        cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN, plan_bundle=bundle_dir
+        cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+        session=PlanSession.from_manifest(bundle_dir),
     )
     eng_p = InferenceEngine(cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN)
     a = plan_io.plan_to_obj(eng_b.memory_report.activation_plan)
@@ -133,12 +191,18 @@ def test_bundle_plan_byte_identical_to_construction_plan(cfg, params, bundle_dir
     ja = json.dumps(a, sort_keys=True, separators=(",", ":"))
     jb = json.dumps(b, sort_keys=True, separators=(",", ":"))
     assert ja == jb
+    # the engine-side state layout matches the bundled one too
+    from repro.core.unified import state_plan_to_obj
+
+    assert state_plan_to_obj(eng_b.memory_report.state_plan) == (
+        state_plan_to_obj(eng_p.memory_report.state_plan)
+    )
 
 
 def test_bundle_engine_serves_identical_tokens(cfg, params, bundle_dir):
     engines = [
         InferenceEngine(cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
-                        plan_bundle=bundle_dir),
+                        session=PlanSession.from_manifest(bundle_dir)),
         InferenceEngine(cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN),
     ]
     outs = []
@@ -153,8 +217,9 @@ def test_bundle_engine_serves_identical_tokens(cfg, params, bundle_dir):
 
 
 def test_fingerprint_mismatch_falls_back_with_warning(cfg, params, bundle_dir):
-    """A bundle compiled for a different serving shape must not be served;
-    the engine plans at construction and says why in one line."""
+    """An exact-bucket session must not serve a bundle whose fingerprint
+    disagrees with the requested bucket; the engine plans at construction
+    and says why in one line."""
     from repro.core.artifact import BundleManifest
 
     # grab the (valid) bundle and re-publish it under the bucket the engine
@@ -165,7 +230,8 @@ def test_fingerprint_mismatch_falls_back_with_warning(cfg, params, bundle_dir):
     man.publish(wrong_key, good)
     traces0 = tracer.TRACE_CALLS
     engine = InferenceEngine(
-        cfg, params, n_slots=N_SLOTS, max_len=32, plan_bundle=bundle_dir
+        cfg, params, n_slots=N_SLOTS, max_len=32,
+        session=PlanSession.from_manifest(bundle_dir, nearest=False),
     )
     rep = engine.memory_report
     assert rep.plan_source in ("planned", "cache")
@@ -177,32 +243,101 @@ def test_fingerprint_mismatch_falls_back_with_warning(cfg, params, bundle_dir):
     engine.submit(np.arange(3, dtype=np.int32), max_new_tokens=2)
     assert len(engine.run_until_done()) == 1
 
+    # the SAME situation with auto-selection on is admissible: the len=48
+    # bundle (a self-consistent longer bucket) serves the len=32 request
+    engine = InferenceEngine(
+        cfg, params, n_slots=N_SLOTS, max_len=32,
+        session=PlanSession.from_manifest(bundle_dir),
+    )
+    assert engine.memory_report.plan_source == "bundle"
+    assert engine.max_len == MAX_LEN
+
 
 def test_missing_and_corrupt_bundles_fall_back(cfg, params, tmp_path):
-    # missing bucket in an empty manifest dir
+    # missing bucket in an empty manifest dir — the warning lists what
+    # exists (here: nothing)
     engine = InferenceEngine(
         cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
-        plan_bundle=tmp_path,
+        session=PlanSession.from_manifest(tmp_path),
     )
     assert engine.memory_report.plan_source in ("planned", "cache")
     assert "unusable" in engine.memory_report.bundle_warning
+    assert "manifest is empty" in engine.memory_report.bundle_warning
     # corrupt single-file bundles: garbage, valid-JSON-wrong-shape — all
     # must degrade to plan-at-construction, never crash serving
     for name, text in (("bad.json", "{not json"),
                        ("list.json", "[1, 2, 3]"),
-                       ("shallow.json", '{"format_version": 1}')):
+                       ("shallow.json", '{"format_version": 2}')):
         bad = tmp_path / name
         bad.write_text(text)
         engine = InferenceEngine(
-            cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN, plan_bundle=bad
+            cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+            session=PlanSession.from_bundle(bad),
         )
         assert engine.memory_report.bundle_warning is not None, name
         assert engine.memory_report.plan_source in ("planned", "cache")
 
 
+def test_v1_bundle_on_v2_engine_falls_back(
+    cfg, params, bundle_dir, tmp_path, monkeypatch
+):
+    """Satellite: a v1 document loads through the shim (DeprecationWarning)
+    but its fingerprint hashed format v1 — this v2 engine must refuse it
+    and plan at construction, preserving the fallback semantics."""
+    from repro.core import artifact
+    from repro.core.artifact import BundleManifest
+
+    good = BundleManifest(bundle_dir).lookup(
+        bucket_key(cfg, n_slots=N_SLOTS, max_len=MAX_LEN)
+    )
+    with monkeypatch.context() as m:
+        # what decode_fingerprint produced when this build wrote v1
+        m.setattr(artifact, "BUNDLE_FORMAT_VERSION", 1)
+        v1_fp = artifact.decode_fingerprint(
+            cfg, n_slots=N_SLOTS, max_len=MAX_LEN
+        )
+    obj = bundle_to_obj(good)
+    obj["format_version"] = 1
+    obj["fingerprint"] = v1_fp
+    for key in ("state_plan", "n_layers", "d_model"):
+        del obj[key]
+    f = tmp_path / "v1.json"
+    f.write_text(json.dumps(obj, sort_keys=True, separators=(",", ":")))
+
+    with pytest.deprecated_call(match="format v1"):
+        engine = InferenceEngine(
+            cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+            session=PlanSession.from_bundle(f),
+        )
+    rep = engine.memory_report
+    assert rep.plan_source in ("planned", "cache")
+    assert "fingerprint mismatch" in rep.bundle_warning
+    # the fallback still produced a full unified plan
+    assert rep.state_plan is not None
+    engine.submit(np.arange(3, dtype=np.int32), max_new_tokens=2)
+    assert len(engine.run_until_done()) == 1
+
+
+def test_legacy_plan_bundle_kwarg_warns_and_serves(cfg, params, bundle_dir):
+    """The deprecated kwargs keep working behind a DeprecationWarning and
+    exact-bucket semantics."""
+    with pytest.deprecated_call(match="session=PlanSession"):
+        engine = InferenceEngine(
+            cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+            plan_bundle=bundle_dir,
+        )
+    assert engine.memory_report.plan_source == "bundle"
+    with pytest.raises(ValueError, match="not both"):
+        InferenceEngine(
+            cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+            session=PlanSession.from_manifest(bundle_dir),
+            plan_bundle=bundle_dir,
+        )
+
+
 def test_verify_bundle_checks_graph_fingerprint(cfg, params, bundle_dir, tmp_path):
     """The config fingerprint cannot see model-code changes;
-    verify_bundle=True trades the zero-trace cold start for a structural
+    verify_graph=True trades the zero-trace cold start for a structural
     check of the stored graph fingerprint against a fresh trace."""
     from repro.core.artifact import BundleManifest, save_bundle
 
@@ -211,7 +346,7 @@ def test_verify_bundle_checks_graph_fingerprint(cfg, params, bundle_dir, tmp_pat
     )
     engine = InferenceEngine(
         cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
-        plan_bundle=good, verify_bundle=True,
+        session=PlanSession.from_bundle(good, verify_graph=True),
     )
     assert engine.memory_report.plan_source == "bundle"
 
@@ -220,7 +355,7 @@ def test_verify_bundle_checks_graph_fingerprint(cfg, params, bundle_dir, tmp_pat
     save_bundle(tampered, f)
     engine = InferenceEngine(
         cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
-        plan_bundle=f, verify_bundle=True,
+        session=PlanSession.from_bundle(f, verify_graph=True),
     )
     rep = engine.memory_report
     assert rep.plan_source in ("planned", "cache")
@@ -231,7 +366,8 @@ def test_bundle_carries_xla_temp_measurement(cfg, params, bundle_dir):
     """compile.py measures XLA's temp allocation offline so bundle-served
     reports keep the planned-vs-XLA validation line."""
     engine = InferenceEngine(
-        cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN, plan_bundle=bundle_dir
+        cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+        session=PlanSession.from_manifest(bundle_dir),
     )
     prov = engine.plan_bundle.provenance
     assert "xla_temp_bytes" in prov
@@ -245,7 +381,8 @@ def test_searched_bundle_is_served_and_never_worse(cfg, params, tmp_path):
     )
     assert res.bundle.plan.total_size <= res.greedy_plan.total_size
     engine = InferenceEngine(
-        cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN, plan_bundle=tmp_path
+        cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+        session=PlanSession.from_manifest(tmp_path),
     )
     rep = engine.memory_report
     assert rep.plan_source == "bundle"

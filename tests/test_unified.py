@@ -1,0 +1,311 @@
+"""Unified planning facade tests: plan()/PlanSpec/UnifiedPlan/StatePlan.
+
+The facade is the API every serving path now goes through, so these
+tests pin its contracts: wrapper parity (``plan_records``/``plan_graph``
+return byte-identical plans to a direct ``plan()`` call), the cross-step
+state layout's §4 properties (symmetric slots, aligned disjoint leaf
+slots, exact per-slot division), fingerprint behavior (bucketed specs
+share the bundle fingerprint; bucket-less specs get a content hash),
+the never-worse search contract through the facade, and both arenas
+materializing from one object.
+"""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.core import plan_io
+from repro.core.graph import GraphBuilder
+from repro.core.planner import plan_graph, plan_records
+from repro.core.records import make_records
+from repro.core.shared_objects import from_slot_log
+from repro.core.unified import (
+    PlanSession,
+    PlanSpec,
+    StateRecord,
+    UnifiedPlan,
+    plan,
+    plan_state,
+    state_plan_from_obj,
+    state_plan_to_obj,
+)
+from repro.runtime.arena import Arena, ArenaLayout
+
+
+def _graph(scale: int = 1):
+    b = GraphBuilder("tiny")
+    x = b.input((4 * scale, 4), "x")
+    h = b.op("matmul", [x], (4 * scale, 8))
+    g = b.op("gelu", [h], (4 * scale, 8))
+    out = b.op("proj", [g, h], (4 * scale, 2))
+    b.mark_output(out)
+    return b.build()
+
+
+def _state_records():
+    return [
+        StateRecord(path="['kv'][0]", shape=(2, 8, 4), dtype="float32",
+                    nbytes=2 * 8 * 4 * 4),
+        StateRecord(path="['kv'][1]", shape=(2, 8, 4), dtype="float32",
+                    nbytes=2 * 8 * 4 * 4),
+        StateRecord(path="['ssm']", shape=(2, 16), dtype="float32",
+                    nbytes=2 * 16 * 4),
+    ]
+
+
+# ------------------------------------------------------------- wrappers
+
+
+def test_plan_records_is_a_thin_wrapper_over_plan():
+    records = make_records([(0, 1, 100), (1, 2, 200), (0, 2, 300)])
+    via_wrapper = plan_records(records, use_cache=False)
+    via_facade = plan(
+        PlanSpec(records=records, use_cache=False)
+    ).activation
+    a = plan_io.plan_to_obj(via_wrapper)
+    b = plan_io.plan_to_obj(via_facade)
+    a["plan_wall_s"] = b["plan_wall_s"] = 0.0
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+
+def test_plan_graph_is_a_thin_wrapper_over_plan():
+    g = _graph()
+    via_wrapper = plan_graph(g, use_cache=False)
+    via_facade = plan(PlanSpec(graph=g, use_cache=False)).activation
+    assert via_wrapper.total_size == via_facade.total_size
+    assert via_wrapper.offsets == via_facade.offsets
+    assert via_wrapper.graph_name == via_facade.graph_name == g.name
+
+
+def test_empty_spec_rejected():
+    with pytest.raises(ValueError, match="empty PlanSpec"):
+        plan(PlanSpec())
+
+
+def test_search_needs_a_graph():
+    records = make_records([(0, 1, 100)])
+    with pytest.raises(ValueError, match="needs a graph"):
+        plan(PlanSpec(records=records, search=True))
+
+
+# ------------------------------------------------------------ state plan
+
+
+def test_plan_state_layout_properties():
+    sp = plan_state(_state_records(), n_slots=2, max_len=8)
+    assert sp.n_slots == 2 and sp.max_len == 8
+    assert len(sp.leaves) == 3
+    # leaves are packed size-descending, aligned, disjoint
+    offsets = [l.offset for l in sp.leaves]
+    assert offsets == sorted(offsets)
+    for a, b in zip(sp.leaves, sp.leaves[1:]):
+        assert a.slot_nbytes >= b.slot_nbytes
+        assert b.offset >= a.offset + a.slot_nbytes
+    for leaf in sp.leaves:
+        assert leaf.offset % sp.alignment == 0
+        assert leaf.slot_nbytes % sp.alignment == 0
+    assert sp.slot_stride >= sum(l.slot_nbytes for l in sp.leaves)
+    assert sp.total_size == sp.n_slots * sp.slot_stride
+    assert sp.bytes_per_slot == sp.slot_stride
+    # concrete offsets: slot 1's copy of a leaf is one stride later
+    assert (
+        sp.offset_of(1, "['ssm']") == sp.offset_of(0, "['ssm']") + sp.slot_stride
+    )
+    with pytest.raises(KeyError):
+        sp.offset_of(0, "nope")
+    with pytest.raises(IndexError):
+        sp.offset_of(7, "['ssm']")
+
+
+def test_plan_state_rejects_unslotted_leaves():
+    bad = [StateRecord(path="x", shape=(3,), dtype="float32", nbytes=12)]
+    with pytest.raises(ValueError, match="not divisible"):
+        plan_state(bad, n_slots=5, max_len=8)
+
+
+def test_state_plan_round_trips():
+    sp = plan_state(_state_records(), n_slots=4, max_len=16)
+    obj = state_plan_to_obj(sp)
+    sp2 = state_plan_from_obj(json.loads(json.dumps(obj)))
+    assert state_plan_to_obj(sp2) == obj
+    assert sp2 == sp
+
+
+def test_state_plan_is_deterministic():
+    recs = _state_records()
+    a = plan_state(recs, n_slots=2, max_len=8)
+    b = plan_state(list(reversed(recs)), n_slots=2, max_len=8)
+    assert state_plan_to_obj(a) == state_plan_to_obj(b)
+
+
+# --------------------------------------------------------- unified plan
+
+
+def test_unified_total_is_sum_of_halves():
+    g = _graph()
+    up = plan(PlanSpec(
+        graph=g, state_records=_state_records(), n_slots=2, max_len=8,
+        use_cache=False,
+    ))
+    assert up.activation is not None and up.state is not None
+    assert up.total_size == up.activation.total_size + up.state.total_size
+    # the unified footprint never exceeds the independently planned halves
+    act_alone = plan_graph(g, use_cache=False).total_size
+    state_alone = plan_state(_state_records(), n_slots=2, max_len=8).total_size
+    assert up.total_size <= act_alone + state_alone
+    assert "unified footprint" in up.summary()
+
+
+def test_both_arenas_materialize_from_one_object():
+    import numpy as np
+
+    up = plan(PlanSpec(
+        graph=_graph(), state_records=_state_records(), n_slots=2, max_len=8,
+        use_cache=False,
+    ))
+    act_layout, state_layout = up.arena_layouts()
+    assert (act_layout, state_layout) == ArenaLayout.from_unified(up)
+    act_layout.validate()
+    state_layout.validate()
+    arena = Arena(state_layout)
+    assert arena.nbytes == up.state.total_size
+    # store/view a leaf-shaped value through the layout's dense ids
+    tid, _slot, leaf, _off = up.state.flat_entries()[0]
+    n = leaf.slot_nbytes // 4
+    view = arena.store(tid, np.arange(n, dtype=np.float32))
+    assert view.sum() == np.arange(n, dtype=np.float32).sum()
+
+
+def test_spec_fingerprint_is_content_addressed():
+    records = make_records([(0, 1, 100), (1, 2, 200)])
+    fp = plan(PlanSpec(records=records, use_cache=False)).fingerprint
+    assert fp == plan(PlanSpec(records=records, use_cache=False)).fingerprint
+    bigger = make_records([(0, 1, 100), (1, 2, 300)])
+    assert fp != plan(PlanSpec(records=bigger, use_cache=False)).fingerprint
+    with_state = plan(PlanSpec(
+        records=records, state_records=_state_records(), n_slots=2, max_len=8,
+        use_cache=False,
+    )).fingerprint
+    assert fp != with_state
+
+
+def test_bucketed_spec_shares_the_bundle_fingerprint():
+    from repro.configs.base import get_reduced
+    from repro.core.artifact import decode_fingerprint
+
+    cfg = get_reduced("qwen3-0.6b")
+    up = plan(PlanSpec(
+        graph=_graph(), cfg=cfg, n_slots=2, max_len=64, use_cache=False,
+    ))
+    assert up.fingerprint == decode_fingerprint(cfg, n_slots=2, max_len=64)
+
+
+def test_facade_search_is_never_worse():
+    g = _graph(scale=3)
+    baseline = plan(PlanSpec(graph=g, use_cache=False)).activation
+    up = plan(PlanSpec(
+        graph=g, search=True, search_iters=30, fusion_rounds=5,
+        use_cache=False,
+    ))
+    assert up.activation.total_size <= baseline.total_size
+    assert up.search is not None
+    assert up.search.greedy_plan.total_size == baseline.total_size
+    assert up.provenance["greedy_total_bytes"] == baseline.total_size
+    assert up.provenance["searched_total_bytes"] is not None
+    assert "search_stats" in up.provenance
+
+
+# -------------------------------------------------------------- session
+
+
+def test_session_takes_exactly_one_source(tmp_path):
+    with pytest.raises(ValueError, match="exactly one source"):
+        PlanSession()
+    with pytest.raises(ValueError, match="exactly one source"):
+        PlanSession(manifest_dir=tmp_path, spec=PlanSpec())
+
+
+def test_session_from_spec_resolution():
+    from repro.configs.base import get_reduced
+
+    cfg = get_reduced("qwen3-0.6b")
+    # knobs-only spec: the engine traces; the knobs ride along
+    res = PlanSession.from_spec(PlanSpec(strategy="greedy_by_size")).resolve(
+        cfg, n_slots=2, max_len=32
+    )
+    assert res.unified is None and res.source == "spec"
+    assert res.spec.strategy == "greedy_by_size"
+    assert res.max_len == 32
+    # graph-carrying spec: planned immediately, bucket fingerprint
+    res = PlanSession.from_spec(PlanSpec(graph=_graph())).resolve(
+        cfg, n_slots=2, max_len=32
+    )
+    assert res.unified is not None
+    assert res.unified.activation is not None
+
+
+def test_session_miss_lists_compiled_buckets(tmp_path):
+    from repro.configs.base import get_reduced
+    from repro.core.artifact import BundleManifest, bucket_key
+
+    cfg = get_reduced("qwen3-0.6b")
+    # empty manifest
+    res = PlanSession.from_manifest(tmp_path).resolve(
+        cfg, n_slots=2, max_len=32
+    )
+    assert res.unified is None
+    assert "manifest is empty" in res.warning
+    # a manifest with OTHER buckets: the warning lists what exists
+    man = BundleManifest(tmp_path)
+    other_key = bucket_key(cfg, n_slots=8, max_len=128)
+    (tmp_path / "manifest.json").write_text(json.dumps({
+        "format_version": 1,
+        "buckets": {other_key: {"file": "bundle-0.json"}},
+    }))
+    res = PlanSession.from_manifest(tmp_path).resolve(
+        cfg, n_slots=2, max_len=32
+    )
+    assert res.unified is None
+    assert other_key in res.warning
+    assert "compiled buckets" in res.warning
+    del man
+
+
+# ---------------------------------------------------------- slot audit
+
+
+def test_from_slot_log_accepts_valid_log():
+    log = [(0, 0, 3, 0), (1, 0, 2, 1), (0, 4, 6, 2), (1, 3, 5, 3)]
+    asn = from_slot_log(log, n_slots=2, slot_size=64)
+    assert asn.total_size == 2 * 64
+    assert asn.assignment == {0: 0, 1: 1, 2: 0, 3: 1}
+
+
+def test_from_slot_log_rejects_overlap_and_bad_slot():
+    with pytest.raises(ValueError, match="overlaps"):
+        from_slot_log([(0, 0, 5, 0), (0, 3, 7, 1)], n_slots=2)
+    with pytest.raises(ValueError, match="outside"):
+        from_slot_log([(5, 0, 1, 0)], n_slots=2)
+
+
+# -------------------------------------------------- executor integration
+
+
+def test_executor_accepts_unified_plan():
+    import jax.numpy as jnp
+
+    from repro.runtime.executor import ArenaExecutor
+
+    def fn(x):
+        h = jnp.tanh(x @ x.T)
+        return (h + 1.0).sum(axis=0)
+
+    x = jnp.ones((8, 8), jnp.float32)
+    probe = ArenaExecutor(fn, x)
+    up = UnifiedPlan(activation=probe.plan, state=None, fingerprint="x")
+    ex = ArenaExecutor(fn, x, plan=up)
+    assert ex.plan.total_size == probe.plan.total_size
+    import numpy as np
+
+    np.testing.assert_allclose(np.asarray(ex(x)), np.asarray(fn(x)), rtol=1e-6)
