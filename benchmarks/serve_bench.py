@@ -20,7 +20,10 @@ Hard checks (regressions fail CI):
 * searched footprint strictly smaller on >= 2 archs;
 * unified footprint (activation + state) never exceeds the sum of the
   two independently-planned halves, per bucket;
-* the bundle-served engine does zero traces/plans/state layouts.
+* the bundle-served engine does zero traces/plans/state layouts;
+* state residency: the bundle-served engine's LIVE device state bytes
+  equal the bundled ``StatePlan.total_size`` exactly (one plan-backed
+  allocation — planned == live, per arch).
 
 Usage:
     PYTHONPATH=src python benchmarks/serve_bench.py --quick \
@@ -99,6 +102,14 @@ def bench_arch(arch: str, bundle_dir: str, *, iters: int,
         and planner.PLAN_CALLS == plans0
         and unified.STATE_PLAN_CALLS == states0
     ), f"{arch}: bundle path traced/planned/laid out state at construction"
+    # planned == live: the engine's cross-step state is ONE device buffer
+    # of exactly the bundled StatePlan's total (state residency)
+    rep = engine.memory_report
+    assert rep.state_residency, f"{arch}: state residency unexpectedly off"
+    assert rep.state_live_bytes == state_bytes == engine.state.live_bytes, (
+        f"{arch}: live device state {rep.state_live_bytes} B != planned "
+        f"{state_bytes} B"
+    )
 
     plan_io.default_cache().clear()  # true cold start for the baseline
     t0 = time.perf_counter()
@@ -113,6 +124,8 @@ def bench_arch(arch: str, bundle_dir: str, *, iters: int,
         "searched_bytes": searched,
         "delta_bytes": greedy - searched,
         "state_bytes": state_bytes,
+        "state_planned_bytes": state_bytes,
+        "state_live_bytes": rep.state_live_bytes,
         "unified_bytes": unified_bytes,
         "searched_strategy": res.bundle.plan.strategy,
         "fused_groups": (
@@ -127,7 +140,8 @@ def bench_arch(arch: str, bundle_dir: str, *, iters: int,
         f"{arch}: greedy {greedy / KB:.0f} KiB -> searched "
         f"{searched / KB:.0f} KiB ({row['fused_groups']} fused groups) "
         f"+ state {state_bytes / KB:.0f} KiB = {unified_bytes / KB:.0f} KiB "
-        f"unified; cold start {cold_with:.3f}s with bundle vs "
+        f"unified; live state {rep.state_live_bytes / KB:.0f} KiB "
+        f"(== planned); cold start {cold_with:.3f}s with bundle vs "
         f"{cold_without:.3f}s without ({row['cold_start_speedup']}x)"
     )
     return row

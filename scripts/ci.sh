@@ -12,10 +12,15 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-# no bytecode in the tree: 8 .pyc files were accidentally committed once
-if git ls-files | grep -qE '(^|/)__pycache__/|\.pyc$'; then
-    echo "ERROR: tracked .pyc/__pycache__ files:" >&2
-    git ls-files | grep -E '(^|/)__pycache__/|\.pyc$' >&2
+# no bytecode in the tree: 8 .pyc files were accidentally committed once.
+# Flags tracked bytecode anywhere AND any tracked file inside a
+# __pycache__ dir; a deliberate __pycache__/.gitkeep placeholder is the
+# one ignored exception (the dir entry itself is not an artifact leak).
+if git ls-files | grep -E '\.py[co]$|(^|/)__pycache__/' \
+        | grep -vE '(^|/)__pycache__/\.gitkeep$' | grep -q .; then
+    echo "ERROR: tracked bytecode artifacts:" >&2
+    git ls-files | grep -E '\.py[co]$|(^|/)__pycache__/' \
+        | grep -vE '(^|/)__pycache__/\.gitkeep$' >&2
     exit 1
 fi
 
@@ -35,6 +40,7 @@ import repro.launch.serve
 import repro.runtime.arena
 import repro.runtime.engine
 import repro.runtime.executor
+import repro.runtime.residency
 print("import smoke: no DeprecationWarning on import")
 PY
 
@@ -42,8 +48,13 @@ PY
 # over two small archs into ONE temp manifest, then assert serve.py
 # bucket auto-selection picks the nearest compiled bucket for a max_len
 # with no exact match — with zero jaxpr traces, zero planner calls, and
-# zero cross-step state layouts (both halves ship in the v2 bundle)
+# zero cross-step state layouts (both halves ship in the v2 bundle).
+# State residency: the served engine's LIVE device state bytes must equal
+# the bundled StatePlan.total_size exactly (one plan-backed allocation),
+# and a REPRO_STATE_RESIDENCY=off rerun must emit identical tokens (the
+# residency-on/off differential decode check).
 python - <<'PY'
+import os
 import tempfile
 import repro.core.planner as planner
 import repro.core.unified as unified
@@ -57,19 +68,35 @@ with tempfile.TemporaryDirectory() as d:
                 "--slots-list", "2", "--max-lens", "32", "64", "--out", d]
     compile_main()
     t0, p0, s0 = tracer.TRACE_CALLS, planner.PLAN_CALLS, unified.STATE_PLAN_CALLS
-    stats = serve.run([
+    argv = [
         "--arch", "qwen3-0.6b", "--requests", "2", "--prompt-len", "3",
         "--max-new", "2", "--slots", "2", "--max-len", "48",
         "--plan-bundle", d,
-    ])
+    ]
+    stats = serve.run(argv)
     assert stats["plan_source"] == "bundle", stats["bundle_warning"]
     assert stats["requested_max_len"] == 48 and stats["effective_max_len"] == 64, stats
     assert tracer.TRACE_CALLS == t0, "auto-selected bundle traced a jaxpr"
     assert planner.PLAN_CALLS == p0, "auto-selected bundle invoked the planner"
     assert unified.STATE_PLAN_CALLS == s0, "auto-selected bundle laid out state"
     assert stats["tokens"] == 4
+    # one state allocation: live device state bytes == StatePlan.total_size
+    assert stats["state_residency"] is True, stats
+    assert stats["state_live_bytes"] == stats["state_planned_bytes"], stats
+    # residency-on/off differential: the XLA-allocated baseline must emit
+    # the exact same tokens
+    os.environ["REPRO_STATE_RESIDENCY"] = "off"
+    try:
+        baseline = serve.run(argv)
+    finally:
+        del os.environ["REPRO_STATE_RESIDENCY"]
+    assert baseline["state_residency"] is False, baseline
+    assert baseline["tokens_per_request"] == stats["tokens_per_request"], (
+        "residency-on tokens diverged from the XLA-allocated baseline"
+    )
 print("compile --all → serve: nearest-bucket auto-selection, "
-      "zero traces/plans/state layouts")
+      "zero traces/plans/state layouts, live state == planned, "
+      "residency differential clean")
 PY
 
 if [[ -z "${SKIP_BENCH:-}" ]]; then

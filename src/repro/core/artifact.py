@@ -385,6 +385,9 @@ class BundleManifest:
 
     def __init__(self, directory: str | Path):
         self.dir = Path(directory)
+        # memo for pre-`unified_total` index entries: legacy bundles are
+        # loaded at most once per manifest handle during auto-selection
+        self._legacy_totals: dict[str, int] = {}
 
     @property
     def manifest_path(self) -> Path:
@@ -463,6 +466,7 @@ class BundleManifest:
                 "file": path.name,
                 "fingerprint": bundle.fingerprint,
                 "total_size": bundle.plan.total_size,
+                "unified_total": bundle.total_size,
                 "strategy": bundle.plan.strategy,
                 "created_unix": path.stat().st_mtime,
                 "command": None,
@@ -507,6 +511,7 @@ class BundleManifest:
                 "file": path.name,
                 "fingerprint": bundle.fingerprint,
                 "total_size": bundle.plan.total_size,
+                "unified_total": bundle.total_size,
                 "strategy": bundle.plan.strategy,
                 "created_unix": time.time(),
                 "command": command,
@@ -522,30 +527,63 @@ class BundleManifest:
             return None
         return load_bundle(self.dir / entry["file"])
 
+    # an unreadable bundle must LOSE the smallest-footprint ranking (0
+    # would win it and hijack selection from every valid bucket)
+    _UNRANKABLE = 1 << 62
+
+    def _unified_total(self, key: str, entry: dict) -> int:
+        """The bucket's unified footprint (activation + state) for the
+        admission tie-break. Indexed since this revision; older manifest
+        entries fall back to loading the bundle, memoized per handle."""
+        if isinstance(entry.get("unified_total"), int):
+            return entry["unified_total"]
+        fname = entry.get("file")
+        if fname in self._legacy_totals:
+            return self._legacy_totals[fname]
+        try:
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                total = load_bundle(self.dir / fname).total_size
+        except Exception:
+            total = self._UNRANKABLE
+        self._legacy_totals[fname] = total
+        return total
+
     def lookup_nearest(
         self, cfg: "ArchConfig", *, n_slots: int, max_len: int
     ) -> tuple[str, PlanBundle] | None:
         """Bucket auto-selection: the exact bucket if compiled, else the
-        nearest compiled ``max_len >= requested`` with identical
-        arch/layers/width/slots/dtype (a longer cache serves any shorter
-        admissible request; slots and dtype must match exactly). None when
-        no admissible bucket exists."""
+        smallest-footprint admissible compiled bucket. Admissible means
+        identical arch/layers/width/dtype with ``max_len >= requested``
+        (a longer cache serves any shorter request) AND
+        ``n_slots >= requested`` (slots are the §4 shared objects — a
+        bigger pool is admissible, just wasteful). Ties break on the
+        smallest unified footprint (activation + state), then the
+        smallest (max_len, n_slots) for determinism. None when no
+        admissible bucket exists."""
         exact = bucket_key(cfg, n_slots=n_slots, max_len=max_len)
         buckets = self.buckets()
         if exact in buckets:
             return exact, load_bundle(self.dir / buckets[exact]["file"])
         want = parse_bucket_key(exact)
-        best: tuple[int, str] | None = None
-        for key in buckets:
+        best: tuple[tuple[int, int, int], str] | None = None
+        for key, entry in buckets.items():
             got = parse_bucket_key(key)
             if got is None:
                 continue
-            if {**got, "max_len": 0} != {**want, "max_len": 0}:
+            if {**got, "max_len": 0, "n_slots": 0} != (
+                {**want, "max_len": 0, "n_slots": 0}
+            ):
                 continue
-            if got["max_len"] < max_len:
+            if got["max_len"] < max_len or got["n_slots"] < n_slots:
                 continue
-            if best is None or got["max_len"] < best[0]:
-                best = (got["max_len"], key)
+            rank = (
+                self._unified_total(key, entry),
+                got["max_len"],
+                got["n_slots"],
+            )
+            if best is None or rank < best[0]:
+                best = (rank, key)
         if best is None:
             return None
         return best[1], load_bundle(self.dir / buckets[best[1]]["file"])
@@ -576,8 +614,9 @@ def resolve_bundle(
 ) -> PlanBundle:
     """Accept what a serving caller naturally has: a loaded bundle, a path
     to one bundle file, or a manifest directory (looked up by bucket key;
-    with ``nearest=True`` the lookup auto-selects the nearest compiled
-    ``max_len >= requested`` bucket). Raises ``FileNotFoundError``/
+    with ``nearest=True`` the lookup auto-selects the smallest-footprint
+    admissible compiled bucket — ``max_len`` and ``n_slots`` both
+    >= requested). Raises ``FileNotFoundError``/
     ``ValueError`` on missing or unreadable sources — a manifest miss
     lists the bucket keys that DO exist; fingerprint verification is the
     caller's job (the engine checks and falls back)."""

@@ -309,15 +309,27 @@ def _greedy_by_size_improved_staged(
 def from_slot_log(
     slot_log: Sequence[tuple[int, int, int, int]],
     *,
-    n_slots: int,
+    n_slots: int | None = None,
     slot_size: int = 1,
+    state_plan=None,
 ) -> SharedObjectsAssignment:
     """Build the §4-style assignment from a serving slot log
     (``(slot, first_wave, last_wave, request_id)`` tuples, as recorded by
     the engine): slots are the shared objects, requests the tensors, the
     decode wave the operator index. Raises ``ValueError`` if two requests
     overlap on one slot — this is the runtime audit of the cross-step
-    :class:`~repro.core.unified.StatePlan`'s shared-objects claim."""
+    :class:`~repro.core.unified.StatePlan`'s shared-objects claim.
+
+    Pass ``state_plan`` to audit against the plan the engine actually
+    serves from — ``n_slots`` and ``slot_size`` then come from the plan's
+    own slot regions (bucket auto-selection may serve a wider pool than a
+    caller requested, so deriving them from the plan is the only
+    assignment that cannot disagree with the live layout)."""
+    if state_plan is not None:
+        n_slots = state_plan.n_slots
+        slot_size = state_plan.bytes_per_slot
+    if n_slots is None:
+        raise ValueError("from_slot_log needs n_slots or a state_plan")
     asn = SharedObjectsAssignment(
         strategy="slot_log",
         objects=[SharedObject(object_id=s, size=slot_size) for s in range(n_slots)],

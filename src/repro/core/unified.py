@@ -92,6 +92,28 @@ class StateLeaf:
     offset: int  # byte offset within a slot region
 
 
+@dataclasses.dataclass(frozen=True)
+class LeafView:
+    """One (slot, leaf) cell of the state arena, fully addressed: where
+    its bytes live (``offset``), how many are payload (``used_nbytes``,
+    the unaligned per-slot share) and how many are reserved
+    (``slot_nbytes``, the aligned bounds-contract size). This is THE leaf
+    addressing unit shared by every arena implementation — the numpy
+    :class:`~repro.runtime.arena.Arena`, the jax
+    :class:`~repro.runtime.arena.DeviceArena`, and the residency
+    pack/unpack views are all built from :meth:`StatePlan.leaf_view_spec`.
+    """
+
+    tensor_id: int  # dense: slot * n_leaves + leaf_index
+    slot: int
+    leaf_index: int
+    path: str
+    dtype: str
+    offset: int  # absolute byte offset in the state buffer
+    used_nbytes: int  # payload bytes of the per-slot share (unaligned)
+    slot_nbytes: int  # planned slot bytes (aligned; bounds enforcement)
+
+
 @dataclasses.dataclass
 class StatePlan:
     """Slot/KV shared-objects layout with concrete offsets (paper §4 at
@@ -124,17 +146,41 @@ class StatePlan:
         raise KeyError(f"no state leaf at path {path!r}")
 
     def flat_entries(self) -> list[tuple[int, int, StateLeaf, int]]:
-        """(tensor_id, slot, leaf, absolute_offset) for every (slot, leaf)
-        pair — the arena-materialization view. Ids are dense:
-        ``slot * len(leaves) + leaf_index``."""
-        out = []
+        """(tensor_id, slot, leaf, absolute_offset) tuple view over
+        :meth:`leaf_view_spec` — same cells, legacy tuple shape."""
+        return [
+            (v.tensor_id, v.slot, self.leaves[v.leaf_index], v.offset)
+            for v in self.leaf_view_spec()
+        ]
+
+    def leaf_view_spec(self) -> "list[LeafView]":
+        """The leaf addressing API: one :class:`LeafView` per (slot, leaf)
+        cell, with absolute offsets and both the payload and the planned
+        (aligned) byte sizes. Every state arena — host numpy, device jax,
+        and the residency views the engine decodes through — materializes
+        from this one spec, so they cannot disagree on where a leaf's
+        bytes live."""
+        import numpy as np
+
+        views: list[LeafView] = []
+        n_leaves = len(self.leaves)
         for slot in range(self.n_slots):
             base = slot * self.slot_stride
             for i, leaf in enumerate(self.leaves):
-                out.append(
-                    (slot * len(self.leaves) + i, slot, leaf, base + leaf.offset)
+                nbytes = math.prod(leaf.shape) * np.dtype(leaf.dtype).itemsize
+                views.append(
+                    LeafView(
+                        tensor_id=slot * n_leaves + i,
+                        slot=slot,
+                        leaf_index=i,
+                        path=leaf.path,
+                        dtype=leaf.dtype,
+                        offset=base + leaf.offset,
+                        used_nbytes=nbytes // self.n_slots,
+                        slot_nbytes=leaf.slot_nbytes,
+                    )
                 )
-        return out
+        return views
 
     def summary(self) -> str:
         return (
@@ -497,15 +543,17 @@ def plan(spec: PlanSpec) -> UnifiedPlan:
 class Resolution:
     """What a :class:`PlanSession` hands the engine: the unified plan (or
     None — trace-and-plan fallback), the backing bundle when there is one,
-    the effective serving ``max_len`` (>= requested when nearest-bucket
-    selection picked a longer compiled bucket), a one-line warning for the
-    report, and the spec knobs the fallback path should honor."""
+    the effective serving bucket (``max_len`` and ``n_slots`` may both be
+    >= requested when nearest-bucket selection picked a longer or
+    wider-pool compiled bucket), a one-line warning for the report, and
+    the spec knobs the fallback path should honor."""
 
     unified: UnifiedPlan | None
     bundle: "PlanBundle | None"
     source: str  # "bundle" | "spec" | "unresolved"
     warning: str | None
     max_len: int
+    n_slots: int = 0  # 0 = the requested slot count
     spec: PlanSpec | None = None
 
 
@@ -513,8 +561,9 @@ class PlanSession:
     """The one plan source an engine serves from.
 
     ``from_manifest(dir)`` — compiled-artifact serving with bucket
-    auto-selection: exact bucket first, else the nearest compiled
-    ``max_len >= requested`` with the same arch/slots/dtype (pass
+    auto-selection: exact bucket first, else the admissible compiled
+    bucket (``max_len >= requested`` and ``n_slots >= requested``, same
+    arch/dtype) with the smallest unified footprint (pass
     ``nearest=False`` for exact-only). ``from_bundle`` — one bundle file
     or object. ``from_spec`` — plan on demand from a :class:`PlanSpec`
     (pre-searched graphs, pinned strategies); an empty spec defers to the
@@ -577,11 +626,11 @@ class PlanSession:
             # knobs only — the engine traces, then plans with these knobs
             return Resolution(
                 unified=None, bundle=None, source="spec", warning=None,
-                max_len=max_len, spec=spec,
+                max_len=max_len, n_slots=n_slots, spec=spec,
             )
         return Resolution(
             unified=plan(spec), bundle=None, source="spec", warning=None,
-            max_len=max_len, spec=spec,
+            max_len=max_len, n_slots=n_slots, spec=spec,
         )
 
     def _resolve_bundle(self, cfg, *, n_slots: int, max_len: int) -> Resolution:
@@ -602,24 +651,27 @@ class PlanSession:
                 unified=None, bundle=None, source="unresolved",
                 warning=f"plan bundle unusable ({e}); "
                         f"planned at construction instead",
-                max_len=max_len,
+                max_len=max_len, n_slots=n_slots,
             )
         # Nearest-bucket mode verifies the bundle against ITS OWN bucket
-        # (serving max_len >= requested is the point of auto-selection);
-        # strict mode (single bundles, exact-only manifests) keeps the
-        # requested bucket as the expectation.
-        if nearest and bundle.max_len < max_len:
+        # (serving max_len >= requested — and, since the slot pool is the
+        # §4 shared-objects set, n_slots >= requested — is the point of
+        # auto-selection); strict mode (single bundles, exact-only
+        # manifests) keeps the requested bucket as the expectation.
+        if nearest and (bundle.max_len < max_len or bundle.n_slots < n_slots):
             return Resolution(
                 unified=None, bundle=None, source="unresolved",
                 warning=(
-                    f"plan bundle compiled for max_len={bundle.max_len} < "
-                    f"requested {max_len}; planned at construction instead"
+                    f"plan bundle compiled for slots={bundle.n_slots} "
+                    f"len={bundle.max_len} < requested slots={n_slots} "
+                    f"len={max_len}; planned at construction instead"
                 ),
-                max_len=max_len,
+                max_len=max_len, n_slots=n_slots,
             )
         verify_len = bundle.max_len if nearest else max_len
+        verify_slots = bundle.n_slots if nearest else n_slots
         expect = artifact.decode_fingerprint(
-            cfg, n_slots=n_slots, max_len=verify_len
+            cfg, n_slots=verify_slots, max_len=verify_len
         )
         if bundle.fingerprint != expect:
             return Resolution(
@@ -629,7 +681,7 @@ class PlanSession:
                     f"{str(bundle.fingerprint)[:12]}, engine {expect[:12]}); "
                     f"planned at construction instead"
                 ),
-                max_len=max_len,
+                max_len=max_len, n_slots=n_slots,
             )
         return Resolution(
             unified=artifact.unified_from_bundle(bundle),
@@ -637,4 +689,5 @@ class PlanSession:
             source="bundle",
             warning=None,
             max_len=max(bundle.max_len, max_len) if nearest else max_len,
+            n_slots=max(bundle.n_slots, n_slots) if nearest else n_slots,
         )

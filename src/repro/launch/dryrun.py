@@ -156,12 +156,17 @@ def planner_report(jitted, specs, name: str, search: bool = False,
     if state_pytree is not None and n_slots:
         from repro.core.unified import plan_state, state_records_from_pytree
 
-        state = plan_state(
-            state_records_from_pytree(state_pytree, n_slots=n_slots),
-            n_slots=n_slots, max_len=max_len,
-        )
+        records = state_records_from_pytree(state_pytree, n_slots=n_slots)
+        state = plan_state(records, n_slots=n_slots, max_len=max_len)
+        # planned-vs-live: what the decode step's XLA-allocated cache
+        # pytree occupies on device (the donated argument bytes) next to
+        # the StatePlan's one-arena total — the residency engine's live
+        # bytes equal the latter exactly (runtime/residency.py)
+        live = sum(r.nbytes for r in records)
         out.update({
             "state_total_gb": state.total_size / 1e9,
+            "state_live_gb": live / 1e9,
+            "state_plan_overhead": round(state.total_size / max(live, 1), 6),
             "state_leaves": len(state.leaves),
             "unified_total_gb": (plan.total_size + state.total_size) / 1e9,
         })

@@ -100,6 +100,9 @@ def run(argv: list[str] | None = None) -> dict:
     if engine.max_len != args.max_len:
         print(f"--- bucket auto-selection: requested max_len={args.max_len} "
               f"-> serving the compiled len={engine.max_len} bucket ---")
+    if engine.n_slots != args.slots:
+        print(f"--- bucket auto-selection: requested slots={args.slots} "
+              f"-> serving the compiled slots={engine.n_slots} pool ---")
     cold_start_noartifact_s = None
     if args.compare_cold_start and report.plan_source == "bundle":
         t0 = time.perf_counter()
@@ -111,6 +114,12 @@ def run(argv: list[str] | None = None) -> dict:
               f"slower) ---")
     print("--- memory report (the paper's planner on the decode step) ---")
     print(report.summary())
+    # planned-vs-live: with residency on, the engine's whole cross-step
+    # state is ONE device buffer of exactly the planned size
+    print(f"--- live device state: {report.state_live_bytes} B "
+          f"(planned {report.state_planned_bytes} B, unified plan "
+          f"{engine.unified_plan.total_size} B, residency "
+          f"{'on' if report.state_residency else 'off'}) ---")
 
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
@@ -130,13 +139,10 @@ def run(argv: list[str] | None = None) -> dict:
     # slot-reuse audit: the engine's slot log IS a §4 shared-objects
     # assignment (slots = objects, requests = tensors); from_slot_log
     # raises if any two requests overlapped on one slot
-    audit = from_slot_log(
-        engine.slot_log, n_slots=args.slots,
-        slot_size=report.state_plan.bytes_per_slot if report.state_plan else 1,
-    )
+    audit = from_slot_log(engine.slot_log, state_plan=report.state_plan)
     print(f"slot log (slot, admitted, finished, rid): {engine.slot_log}")
     print(f"slot audit: {len(audit.assignment)} requests over "
-          f"{args.slots} slots, no interval overlap")
+          f"{engine.n_slots} slots, no interval overlap")
     return {
         "requests": len(done),
         "tokens": toks,
@@ -152,8 +158,13 @@ def run(argv: list[str] | None = None) -> dict:
             report.state_plan.total_size if report.state_plan else None
         ),
         "unified_total_bytes": report.unified_total_bytes,
+        "state_planned_bytes": report.state_planned_bytes,
+        "state_live_bytes": report.state_live_bytes,
+        "state_residency": report.state_residency,
         "requested_max_len": args.max_len,
         "effective_max_len": engine.max_len,
+        "requested_slots": args.slots,
+        "effective_slots": engine.n_slots,
     }
 
 

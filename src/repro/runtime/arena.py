@@ -14,6 +14,12 @@ stored offsets, or from the cross-step
 a :class:`~repro.core.unified.UnifiedPlan` materialize from that one
 object (:meth:`ArenaLayout.from_unified`). The serving path never needs
 planner objects to materialize its memory.
+
+Two arena implementations share the layout contract: the numpy
+:class:`Arena` (host buffers — the executor's deployment path) and the
+jax :class:`DeviceArena` (one flat ``uint8`` device buffer whose views
+are carved with ``lax.dynamic_slice`` + bitcast — the engine's
+cross-step state residency, see ``runtime/residency.py``).
 """
 
 from __future__ import annotations
@@ -53,18 +59,32 @@ class ArenaLayout:
         return ArenaLayout.from_plan(bundle.plan)
 
     @staticmethod
-    def from_state_plan(state: "StatePlan") -> "ArenaLayout":
+    def from_state_plan(state: "StatePlan | None") -> "ArenaLayout":
         """Cross-step state arena: one dense tensor id per (slot, leaf)
-        pair (``slot * n_leaves + leaf_index``), offsets straight from the
-        slot/KV layout's concrete offsets."""
+        pair (``slot * n_leaves + leaf_index``), addressed through the
+        plan's :meth:`~repro.core.unified.StatePlan.leaf_view_spec` — the
+        same spec the device arena and the residency views consume.
+
+        Unlike activation layouts, state regions must be pairwise
+        DISJOINT (every slot's state is live across the whole decode), so
+        this constructor validates non-overlap in addition to bounds."""
+        if state is None:
+            raise ValueError(
+                "no cross-step state plan to materialize (state_plan is "
+                "None — a v1 bundle ships only the activation half; "
+                "recompile with launch/compile.py for a v2 bundle)"
+            )
         offsets: dict[int, int] = {}
         sizes: dict[int, int] = {}
-        for tid, _slot, leaf, off in state.flat_entries():
-            offsets[tid] = off
-            sizes[tid] = leaf.slot_nbytes
-        return ArenaLayout(
+        for view in state.leaf_view_spec():
+            offsets[view.tensor_id] = view.offset
+            sizes[view.tensor_id] = view.slot_nbytes
+        layout = ArenaLayout(
             total_size=state.total_size, offsets=offsets, sizes=sizes
         )
+        layout.validate()
+        layout.validate_disjoint()
+        return layout
 
     @staticmethod
     def from_unified(
@@ -82,6 +102,23 @@ class ArenaLayout:
                 raise ValueError(
                     f"tensor {tid}: slot [{off}, {off + size}) outside "
                     f"arena of {self.total_size} B"
+                )
+
+    def validate_disjoint(self) -> None:
+        """No two planned slots may share bytes. Activation layouts alias
+        on purpose (disjoint lifetimes sharing memory IS the paper's
+        win), so this is NOT part of :meth:`validate`; cross-step state
+        regions are all live at once and must never overlap — a corrupt
+        state plan fails here with the offending pair named."""
+        spans = sorted(
+            (off, off + self.sizes.get(tid, 0), tid)
+            for tid, off in self.offsets.items()
+        )
+        for (s1, e1, t1), (s2, e2, t2) in zip(spans, spans[1:]):
+            if s2 < e1:
+                raise ValueError(
+                    f"state regions overlap: tensor {t1} [{s1}, {e1}) and "
+                    f"tensor {t2} [{s2}, {e2}) share bytes"
                 )
 
 
@@ -133,3 +170,75 @@ class Arena:
             .view(np.dtype(dtype))
             .reshape(shape)
         )
+
+
+class DeviceArena:
+    """jax twin of :class:`Arena`: the same :class:`ArenaLayout` and the
+    same bounds-checked view contract, but the backing store is a flat
+    ``uint8`` device buffer threaded *functionally* — ``store`` returns a
+    NEW buffer value instead of mutating, so it composes with jit; under
+    a donated jit argument XLA updates the one physical allocation in
+    place, which is exactly how the engine's decode step keeps the whole
+    cross-step state in ONE device buffer across waves.
+
+    All offsets/sizes are Python ints (the plan is static), so every
+    ``dynamic_slice``/``dynamic_update_slice`` lowers to a static-index
+    slice XLA can fuse or alias away.
+    """
+
+    def __init__(self, layout: "ArenaLayout"):
+        layout.validate()
+        self.layout = layout
+        self._sizes = layout.sizes
+
+    @property
+    def nbytes(self) -> int:
+        return max(self.layout.total_size, 1)
+
+    def allocate(self):
+        """A fresh zeroed device buffer of the arena's full size."""
+        import jax.numpy as jnp
+
+        return jnp.zeros((self.nbytes,), jnp.uint8)
+
+    def _check(self, tensor_id: int, nbytes: int) -> int:
+        off = self.layout.offsets[tensor_id]
+        # same contract as Arena.view: an oversized view would silently
+        # alias the NEXT tensor's planned slot
+        if nbytes > self._sizes[tensor_id]:
+            raise ValueError(
+                f"tensor {tensor_id}: view of {nbytes} B exceeds planned "
+                f"{self._sizes[tensor_id]} B"
+            )
+        if off + nbytes > self.layout.total_size:
+            raise ValueError(
+                f"tensor {tensor_id}: view [{off}, {off + nbytes}) exceeds "
+                f"arena of {self.layout.total_size} B"
+            )
+        return off
+
+    def view(self, buf, tensor_id: int, shape, dtype):
+        """Read the tensor's planned bytes out of ``buf`` as a
+        ``shape``/``dtype`` jax array (slice + bitcast + reshape)."""
+        import jax
+        import jax.numpy as jnp
+
+        dt = jnp.dtype(dtype)
+        nbytes = int(np.prod(shape)) * dt.itemsize
+        off = self._check(tensor_id, nbytes)
+        raw = jax.lax.dynamic_slice(buf, (off,), (nbytes,))
+        if dt.itemsize > 1:
+            raw = raw.reshape(-1, dt.itemsize)
+        return jax.lax.bitcast_convert_type(raw, dt).reshape(shape)
+
+    def store(self, buf, tensor_id: int, value):
+        """Return a new buffer with ``value``'s bytes at the tensor's
+        planned offset (functional twin of :meth:`Arena.store`)."""
+        import jax
+        import jax.numpy as jnp
+
+        dt = jnp.dtype(value.dtype)
+        nbytes = int(np.prod(value.shape)) * dt.itemsize
+        off = self._check(tensor_id, nbytes)
+        raw = jax.lax.bitcast_convert_type(value, jnp.uint8).reshape(-1)
+        return jax.lax.dynamic_update_slice(buf, raw, (off,))

@@ -16,9 +16,14 @@ feature. At engine construction we:
    (``trace/jaxpr_liveness``) and plans it (paper §5), recording a
    one-line warning in the report;
 2. materialize the activation arena straight from the plan's offsets
-   (``engine.activation_arena`` — allocate once, serve forever) and keep
-   the cross-step state layout (``engine.state_layout``) next to the jax
-   cache buffers it accounts for;
+   (``engine.activation_arena`` — allocate once, serve forever) and
+   MATERIALIZE the cross-step state from the plan too: with state
+   residency on (default; ``REPRO_STATE_RESIDENCY=off`` to disable) the
+   per-slot KV caches and decode buffers live as views over ONE flat
+   device buffer of exactly ``StatePlan.total_size`` bytes
+   (``runtime/residency.py``), donate-threaded through the decode jit so
+   XLA reuses the same allocation every wave — the planned layout is the
+   live layout, not an accounting overlay;
 3. lay out the CROSS-STEP state (per-slot KV caches + decode buffers) as
    a Shared-Objects instance where ``op index == decode wave`` — slots
    are the shared objects, requests are the tensors (paper §4 applied
@@ -28,16 +33,16 @@ feature. At engine construction we:
    step all active slots each wave, retire on EOS/max_len.
 
 The decode step itself is jit-compiled once; the engine never reallocates
-its buffers (donate-style cache threading).
+its buffers (the state buffer is a donated jit argument, so the decode
+writes each wave's new state into the same physical allocation).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 import warnings
 from pathlib import Path
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -55,9 +60,14 @@ from repro.core.unified import (
     plan_state,
     state_records_from_pytree,
 )
-from repro.models import transformer
 from repro.models.api import Model
-from repro.runtime.arena import Arena, ArenaLayout
+from repro.runtime.arena import Arena
+from repro.runtime.residency import (
+    PytreeState,
+    ResidentState,
+    StateResidency,
+    residency_enabled,
+)
 from repro.trace.jaxpr_liveness import trace_graph
 
 
@@ -76,6 +86,8 @@ class Request:
 class MemoryReport:
     activation_plan: MemoryPlan
     xla_temp_bytes: int | None
+    # exact per-slot state bytes — the StatePlan's slot region size
+    # (``cache_bytes // n_slots`` used to truncate remainder bytes away)
     cache_bytes_per_slot: int
     n_slots: int
     # the activation plan came from the content-addressed plan cache
@@ -90,6 +102,18 @@ class MemoryReport:
     bundle_warning: str | None = None
     # cross-step slot/KV layout (the other half of the unified plan)
     state_plan: StatePlan | None = None
+    # planned-vs-live device accounting: with residency on the engine's
+    # whole cross-step state is ONE buffer of exactly the planned size
+    # (live == planned); off, it is an XLA-allocated pytree whose summed
+    # leaf bytes are reported here instead
+    state_residency: bool = False
+    state_live_bytes: int | None = None
+
+    @property
+    def state_planned_bytes(self) -> int | None:
+        return (
+            self.state_plan.total_size if self.state_plan is not None else None
+        )
 
     @property
     def unified_total_bytes(self) -> int:
@@ -118,6 +142,19 @@ class MemoryReport:
                 f"unified footprint (activation + state): "
                 f"{self.unified_total_bytes / 2**20:.3f} MiB"
             )
+        if self.state_live_bytes is not None:
+            if self.state_residency:
+                lines.append(
+                    f"state residency: ON — live device state "
+                    f"{self.state_live_bytes / 2**20:.3f} MiB in one "
+                    f"plan-backed allocation"
+                )
+            else:
+                lines.append(
+                    f"state residency: off — live device state "
+                    f"{self.state_live_bytes / 2**20:.3f} MiB as an "
+                    f"XLA-allocated cache pytree"
+                )
         lines.append(
             f"KV/state cache: {self.cache_bytes_per_slot / 2**20:.3f} MiB/slot "
             f"x {self.n_slots} slots"
@@ -188,6 +225,8 @@ class InferenceEngine:
         session: PlanSession | None = None,
         greedy: bool = True,
         sample_seed: int | None = 0,
+        # None -> the REPRO_STATE_RESIDENCY env knob (default: on)
+        state_residency: bool | None = None,
         # deprecated plan-source kwargs — use session=PlanSession...
         plan_strategy: str | None = None,
         activation_graph: Graph | None = None,
@@ -206,7 +245,6 @@ class InferenceEngine:
         self.cfg = cfg
         self.model = Model.for_config(cfg)
         self.params = params
-        self.n_slots = n_slots
         self.greedy = greedy
         self.session = session
         # ONE engine-owned generator: a per-slot default_rng(self._wave)
@@ -223,21 +261,29 @@ class InferenceEngine:
         # compile. Nearest-bucket selection may hand back a larger
         # compiled max_len than requested; the engine serves that bucket.
         # Any mismatch or load failure falls back to plan-at-construction
-        # with a one-line warning.
+        # with a one-line warning. Auto-selection may also hand back a
+        # wider slot pool (n_slots >= requested — a bigger §4 shared-object
+        # pool is admissible, just wasteful); the engine serves that pool.
         resolution = (
             session.resolve(cfg, n_slots=n_slots, max_len=max_len)
             if session is not None
             else None
         )
         self.max_len = resolution.max_len if resolution is not None else max_len
+        if resolution is not None and resolution.n_slots:
+            n_slots = resolution.n_slots
+        self.n_slots = n_slots
 
-        self.caches = self.model.init_cache(n_slots, self.max_len)
-        self._reset = jax.jit(lambda c, keep: self.model.reset_slots(c, keep))
-        self._decode = jax.jit(
-            lambda p, t, c, pos, act: self.model.decode_step(
-                p, t, c, pos, active=act
-            )
+        # Shape-level cache template: structure + shapes + dtypes for
+        # tracing, state planning, and the residency binding. No state
+        # buffer is materialized until the backend is chosen below — the
+        # residency path must never allocate the pytree AND the arena.
+        cache_template = jax.eval_shape(
+            lambda: self.model.init_cache(n_slots, self.max_len)
         )
+
+        def _decode_fn(p, t, c, pos, act):
+            return self.model.decode_step(p, t, c, pos, active=act)
 
         bundle = resolution.bundle if resolution is not None else None
         unified = resolution.unified if resolution is not None else None
@@ -254,10 +300,8 @@ class InferenceEngine:
             from repro.core.artifact import graph_fingerprint
 
             fresh = graph_fingerprint(trace_graph(
-                lambda p, t, c, pos, act: self.model.decode_step(
-                    p, t, c, pos, active=act
-                ),
-                params, tok0, self.caches, pos0, act0,
+                _decode_fn,
+                params, tok0, cache_template, pos0, act0,
                 name=f"{cfg.name}-decode",
             ))
             if bundle.graph_fingerprint != fresh:
@@ -286,10 +330,8 @@ class InferenceEngine:
                 spec.graph
                 if spec is not None and spec.graph is not None
                 else trace_graph(
-                    lambda p, t, c, pos, act: self.model.decode_step(
-                        p, t, c, pos, active=act
-                    ),
-                    params, tok0, self.caches, pos0, act0,
+                    _decode_fn,
+                    params, tok0, cache_template, pos0, act0,
                     name=f"{cfg.name}-decode",
                 )
             )
@@ -299,10 +341,13 @@ class InferenceEngine:
         if bundle is None and xla_temp is None:
             # planned-vs-XLA validation line: only a bundle carries the
             # measurement precomputed; every other plan source (trace,
-            # spec-planned searched graph) measures it here
+            # spec-planned searched graph) measures it here. Measured on
+            # the plain cache-pytree decode (comparable across residency
+            # modes and to compile.py's offline measurement).
             try:
                 compiled = (
-                    self._decode.lower(params, tok0, self.caches, pos0, act0)
+                    jax.jit(_decode_fn)
+                    .lower(params, tok0, cache_template, pos0, act0)
                     .compile()
                 )
                 ma = compiled.memory_analysis()
@@ -318,7 +363,7 @@ class InferenceEngine:
             state_plan = unified.state
         else:
             state_plan = plan_state(
-                state_records_from_pytree(self.caches, n_slots=n_slots),
+                state_records_from_pytree(cache_template, n_slots=n_slots),
                 n_slots=n_slots,
                 max_len=self.max_len,
             )
@@ -337,23 +382,48 @@ class InferenceEngine:
         self.plan_bundle = bundle
         # allocate-once deployment: BOTH layouts come from the one unified
         # plan; the activation arena is materialized (the decode step's
-        # scratch bytes), the state layout stays an accounting view over
-        # the jax cache buffers the engine already owns
+        # scratch bytes) and — with residency on — so is the cross-step
+        # state: ONE flat device buffer of exactly StatePlan.total_size
+        # bytes, donate-threaded through the decode jit. With residency
+        # off the state layout degrades to the PR 4 accounting overlay
+        # over an XLA-allocated cache pytree.
         act_layout, self.state_layout = self.unified_plan.arena_layouts()
         self.activation_arena = Arena(act_layout)
-        cache_bytes = sum(
-            np.prod(x.shape) * x.dtype.itemsize
-            for x in jax.tree_util.tree_leaves(self.caches)
-        )
+        self.residency: StateResidency | None = None
+        if residency_enabled(state_residency):
+            try:
+                self.residency = StateResidency(
+                    state_plan, cache_template, n_slots=n_slots,
+                    layout=self.state_layout,
+                )
+                # zero-init straight into the flat buffer (init_cache's
+                # contract is all-zero state): on this path the engine
+                # NEVER materializes a cache pytree, so cold start holds
+                # exactly one state allocation, not pytree + arena
+                self.state = ResidentState(self.model, self.residency)
+            except Exception as e:
+                # a state plan that cannot back this cache pytree must
+                # degrade to the XLA-allocated path, not kill serving
+                warnings.warn(
+                    f"state residency disabled: {e}", RuntimeWarning,
+                    stacklevel=2,
+                )
+                self.residency = None
+        if self.residency is None:
+            self.state = PytreeState(
+                self.model, self.model.init_cache(n_slots, self.max_len)
+            )
         self.memory_report = MemoryReport(
             activation_plan=plan,
             xla_temp_bytes=xla_temp,
-            cache_bytes_per_slot=int(cache_bytes // n_slots),
+            cache_bytes_per_slot=state_plan.bytes_per_slot,
             n_slots=n_slots,
             plan_cache_hit=plan.cache_hit,
             plan_source=plan_source,
             bundle_warning=bundle_warning,
             state_plan=state_plan,
+            state_residency=self.state.residency,
+            state_live_bytes=self.state.live_bytes,
         )
 
         # serving state — per-slot positions (continuous batching: every
@@ -378,24 +448,30 @@ class InferenceEngine:
         )
         return rid
 
+    @property
+    def caches(self):
+        """The live cache pytree — concrete XLA buffers with residency
+        off, views over the one state buffer with it on (inspection
+        only; the serving path never materializes this)."""
+        return self.state.caches
+
     def _step_tokens(self, tokens: np.ndarray, pos: np.ndarray,
                      active: np.ndarray):
         # jnp.array COPIES (jnp.asarray is zero-copy on CPU, and the engine
         # mutates these numpy buffers while the async dispatch may still be
         # reading them — a real data race, found as a nondeterministic
-        # wrong-token bug on the slowest arch)
-        logits, self.caches = self._decode(
-            self.params, jnp.array(tokens), self.caches,
-            jnp.array(pos, jnp.int32), jnp.array(active),
-        )
-        # synchronize: with async dispatch left in flight we observed
-        # rare nondeterministic state corruption on CPU (two stable token
+        # wrong-token bug on the slowest arch).
+        #
+        # The state backend synchronizes on its new state before returning:
+        # with async dispatch left in flight we observed rare
+        # nondeterministic state corruption on CPU (two stable token
         # trajectories from identical inputs; forcing completion removes
         # it). The engine is host-latency-bound at reference scale, so
-        # this costs nothing; a production engine would double-buffer
-        # cache pytrees instead.
-        jax.block_until_ready(self.caches)
-        return logits
+        # this costs nothing; a production engine would double-buffer.
+        return self.state.decode(
+            self.params, jnp.array(tokens),
+            jnp.array(pos, jnp.int32), jnp.array(active),
+        )
 
     def _admit(self) -> None:
         free = [s for s in range(self.n_slots) if s not in self._active]
@@ -412,8 +488,8 @@ class InferenceEngine:
             only_this = np.zeros(self.n_slots, bool)
             only_this[slot] = True
             # wipe the recycled slot's state (stale SSM state would leak);
-            # jnp.array (copying) — see _step_tokens race note
-            self.caches = self._reset(self.caches, jnp.array(~only_this))
+            # the backend copies the keep mask — see _step_tokens race note
+            self.state.reset(~only_this)
             for t in req.prompt[:-1]:
                 self._slot_tokens[slot, 0] = t
                 self._step_tokens(self._slot_tokens, self._slot_pos, only_this)

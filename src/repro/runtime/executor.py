@@ -55,8 +55,17 @@ class ArenaExecutor:
             self.closed, name=getattr(fn, "__name__", "fn"),
             inline_nested=True, expand_scan=False,
         )
+        self.state_arena: Arena | None = None
         if isinstance(plan, UnifiedPlan):
-            plan = plan.activation  # the executor runs the activation half
+            if plan.state is not None:
+                # materialize the cross-step half too (host twin of the
+                # engine's device residency — same leaf_view_spec
+                # addressing), so an executor-driven decode can store
+                # per-slot cache leaves at their planned offsets
+                self.state_arena = Arena(
+                    ArenaLayout.from_state_plan(plan.state)
+                )
+            plan = plan.activation  # execution runs the activation half
         if plan is not None:
             # a precompiled plan (e.g. out of a PlanBundle) skips the
             # planner — but only if it covers exactly this graph's records;

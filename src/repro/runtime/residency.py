@@ -1,0 +1,295 @@
+"""Plan-backed state residency: the engine's cross-step state in ONE
+device buffer, laid out by the :class:`~repro.core.unified.StatePlan`.
+
+PR 4 made the cross-step slot/KV layout a first-class planned object —
+but it was accounting only: the engine's cache pytree was still a bag of
+XLA-allocated buffers whose placement the plan merely described. This
+module closes that gap (the MAFAT/FlashMem observation that the §4 win
+comes from *owning* the physical buffers, not modeling them):
+
+* :class:`StateResidency` binds a cache pytree *structure* to a
+  :class:`~repro.core.unified.StatePlan`: every (slot, leaf) cell is
+  addressed by the plan's :meth:`~repro.core.unified.StatePlan.leaf_view_spec`
+  and carved out of one flat ``uint8`` buffer through a
+  :class:`~repro.runtime.arena.DeviceArena` (``lax.dynamic_slice`` +
+  bitcast views on read, ``dynamic_update_slice`` on write — all static
+  offsets, fully fusible);
+* :class:`ResidentState` is the serving backend built on it: the decode
+  and slot-reset jits take the flat state buffer as a DONATED argument
+  and return its successor, so XLA reuses the same physical allocation
+  every wave — live device state bytes equal ``StatePlan.total_size``
+  exactly, one allocation for the engine's whole cross-step lifecycle;
+* :class:`PytreeState` preserves the previous XLA-allocated cache-pytree
+  path behind the same interface (``REPRO_STATE_RESIDENCY=off`` escape
+  hatch), which is also the baseline of the residency differential test:
+  decode outputs through the arena views are byte-identical to it.
+
+The initial buffer is packed on the host through the *numpy* arena
+(``Arena.store`` over the same leaf-view spec) and shipped with one
+``device_put`` — bounds-checked byte placement, no extra jit compile on
+the cold-start path.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.unified import StatePlan
+from repro.runtime.arena import Arena, ArenaLayout, DeviceArena
+
+
+def residency_enabled(override: bool | None = None) -> bool:
+    """The ``REPRO_STATE_RESIDENCY`` knob: on unless explicitly disabled
+    (``off``/``0``/``false``/``no``). An explicit ``override`` (engine
+    kwarg) wins over the environment."""
+    if override is not None:
+        return override
+    val = os.environ.get("REPRO_STATE_RESIDENCY", "on").strip().lower()
+    return val not in ("off", "0", "false", "no")
+
+
+def _slot_axis(keypath) -> int:
+    """Which leaf axis carries the slot (request batch) dimension.
+
+    The decoder cache contract (``models/transformer.init_cache``): leaves
+    under ``"period"`` are stacked over ``n_periods`` first, so slots are
+    axis 1; everything else (``"remainder"``, shared blocks) carries slots
+    on axis 0. Validated against ``n_slots`` at binding time, so a model
+    breaking the contract fails loudly, not silently."""
+    if keypath and getattr(keypath[0], "key", None) == "period":
+        return 1
+    return 0
+
+
+class StateResidency:
+    """Bind a cache-pytree structure to a StatePlan's leaf-view spec.
+
+    ``template`` may be concrete arrays or ``jax.eval_shape`` structs —
+    only structure, shapes and dtypes are read. Construction validates
+    the binding completely (path sets match, dtypes match, per-slot byte
+    sizes match the plan, the slot axis really has ``n_slots`` extent),
+    so a stale or foreign state plan fails here with a clear error
+    instead of corrupting decode state."""
+
+    def __init__(
+        self,
+        state_plan: StatePlan,
+        template: Any,
+        *,
+        n_slots: int,
+        layout: "ArenaLayout | None" = None,
+    ):
+        if state_plan.n_slots != n_slots:
+            raise ValueError(
+                f"state plan lays out {state_plan.n_slots} slots, engine "
+                f"serves {n_slots}"
+            )
+        self.state_plan = state_plan
+        self.n_slots = n_slots
+        # callers that already materialized (and validated) the layout
+        # from this plan pass it in; from_state_plan re-validates
+        if layout is None:
+            layout = ArenaLayout.from_state_plan(state_plan)
+        self.arena = DeviceArena(layout)
+
+        leaves, self.treedef = jax.tree_util.tree_flatten_with_path(template)
+        views_by_path: dict[str, list] = {}
+        for view in state_plan.leaf_view_spec():
+            views_by_path.setdefault(view.path, []).append(view)
+
+        tmpl_paths = {jax.tree_util.keystr(p) for p, _ in leaves}
+        if tmpl_paths != set(views_by_path):
+            missing = sorted(tmpl_paths - set(views_by_path))
+            extra = sorted(set(views_by_path) - tmpl_paths)
+            raise ValueError(
+                f"state plan does not cover this cache pytree: "
+                f"{len(missing)} leaf(s) unplanned {missing[:3]}, "
+                f"{len(extra)} planned leaf(s) absent {extra[:3]}"
+            )
+
+        # per-leaf binding: (path, slot_axis, per-slot shape, dtype, views)
+        self._bindings = []
+        for keypath, leaf in leaves:
+            path = jax.tree_util.keystr(keypath)
+            axis = _slot_axis(keypath)
+            shape = tuple(int(d) for d in leaf.shape)
+            if axis >= len(shape) or shape[axis] != n_slots:
+                raise ValueError(
+                    f"state leaf {path!r}: expected {n_slots} slots on "
+                    f"axis {axis} of shape {shape}"
+                )
+            dt = jnp.dtype(leaf.dtype)
+            per_slot_shape = shape[:axis] + shape[axis + 1 :]
+            per_slot_nbytes = int(np.prod(per_slot_shape)) * dt.itemsize
+            views = sorted(views_by_path[path], key=lambda v: v.slot)
+            for v in views:
+                if v.dtype != dt.name:
+                    raise ValueError(
+                        f"state leaf {path!r}: plan dtype {v.dtype} != "
+                        f"cache dtype {dt.name}"
+                    )
+                if v.used_nbytes != per_slot_nbytes:
+                    raise ValueError(
+                        f"state leaf {path!r}: plan expects "
+                        f"{v.used_nbytes} B/slot, cache carries "
+                        f"{per_slot_nbytes} B/slot"
+                    )
+            self._bindings.append((path, axis, per_slot_shape, dt, views))
+
+    @property
+    def total_size(self) -> int:
+        return self.state_plan.total_size
+
+    def init_buffer(self, caches: Any = None):
+        """A fresh state buffer: zeroed (``caches=None`` — the models'
+        ``init_cache`` contract is all-zero state, so the engine never
+        materializes a cache pytree on the residency path), or packed
+        from concrete initial caches.
+
+        Concrete packing goes host-side through the bounds-checked numpy
+        :class:`Arena` (same leaf-view spec as the device views), then
+        one ``device_put`` — correct for any initial cache contents, and
+        no extra jit compile on the cold-start path."""
+        if caches is None:
+            return self.arena.allocate()
+        host = Arena(self.arena.layout)
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(caches)
+        if treedef != self.treedef:
+            raise ValueError(
+                "initial caches do not match the bound pytree structure"
+            )
+        for (_, leaf), (path, axis, _pss, dt, views) in zip(
+            leaves, self._bindings
+        ):
+            arr = np.asarray(leaf)
+            for view in views:
+                host.store(
+                    view.tensor_id, np.take(arr, view.slot, axis=axis)
+                )
+        return jax.device_put(host.buf)
+
+    def unpack(self, buf) -> Any:
+        """The cache pytree as views over ``buf`` — every leaf rebuilt
+        from its per-slot cells at the plan's offsets."""
+        out = []
+        for _path, axis, per_slot_shape, dt, views in self._bindings:
+            per_slot = [
+                self.arena.view(buf, v.tensor_id, per_slot_shape, dt)
+                for v in views
+            ]
+            out.append(jnp.stack(per_slot, axis=axis))
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+    def pack(self, caches: Any, buf):
+        """Write a cache pytree back into ``buf`` at the plan's offsets;
+        returns the successor buffer value."""
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(caches)
+        if treedef != self.treedef:
+            raise ValueError(
+                "decode returned a cache pytree with a different structure "
+                "than the bound template"
+            )
+        for (_, leaf), (_path, axis, _pss, dt, views) in zip(
+            leaves, self._bindings
+        ):
+            for view in views:
+                buf = self.arena.store(
+                    buf, view.tensor_id, jnp.take(leaf, view.slot, axis=axis)
+                )
+        return buf
+
+
+class ResidentState:
+    """Serving backend: cross-step state donate-threaded as ONE buffer.
+
+    ``decode``/``reset`` donate the flat state buffer to their jits and
+    keep its successor, so XLA writes the new state into the same
+    physical allocation every wave — the planned layout IS the live
+    layout, and ``live_bytes == StatePlan.total_size`` for the engine's
+    whole lifetime."""
+
+    residency = True
+
+    def __init__(
+        self, model, residency: StateResidency, init_caches: Any = None
+    ):
+        self.model = model
+        self._residency = residency
+        self.buf = residency.init_buffer(init_caches)
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(2,))
+        self._reset = jax.jit(self._reset_impl, donate_argnums=(0,))
+
+    def _decode_impl(self, params, tokens, buf, pos, active):
+        caches = self._residency.unpack(buf)
+        logits, new_caches = self.model.decode_step(
+            params, tokens, caches, pos, active=active
+        )
+        return logits, self._residency.pack(new_caches, buf)
+
+    def _reset_impl(self, buf, keep):
+        caches = self._residency.unpack(buf)
+        return self._residency.pack(self.model.reset_slots(caches, keep), buf)
+
+    def decode(self, params, tokens, pos, active):
+        logits, self.buf = self._decode(params, tokens, self.buf, pos, active)
+        # synchronize before the engine mutates its host-side buffers —
+        # see the _step_tokens race note in runtime/engine.py
+        jax.block_until_ready(self.buf)
+        return logits
+
+    def reset(self, keep):
+        self.buf = self._reset(self.buf, jnp.array(keep))
+        jax.block_until_ready(self.buf)
+
+    @property
+    def caches(self) -> Any:
+        """The cache pytree as live views over the state buffer (for
+        inspection/tracing; decode never materializes this on the host)."""
+        return self._residency.unpack(self.buf)
+
+    @property
+    def live_bytes(self) -> int:
+        return int(self.buf.nbytes)
+
+
+class PytreeState:
+    """The pre-residency backend (``REPRO_STATE_RESIDENCY=off``): caches
+    stay an XLA-allocated pytree, reallocated by value every step. Same
+    interface as :class:`ResidentState`, so the engine is oblivious."""
+
+    residency = False
+
+    def __init__(self, model, init_caches: Any):
+        self.model = model
+        self.caches = init_caches
+        self._decode = jax.jit(
+            lambda p, t, c, pos, act: model.decode_step(
+                p, t, c, pos, active=act
+            )
+        )
+        self._reset = jax.jit(lambda c, keep: model.reset_slots(c, keep))
+
+    def decode(self, params, tokens, pos, active):
+        logits, self.caches = self._decode(
+            params, tokens, self.caches, pos, active
+        )
+        # see the _step_tokens race note in runtime/engine.py
+        jax.block_until_ready(self.caches)
+        return logits
+
+    def reset(self, keep):
+        self.caches = self._reset(self.caches, jnp.array(keep))
+
+    @property
+    def live_bytes(self) -> int:
+        return int(
+            sum(
+                int(np.prod(x.shape)) * x.dtype.itemsize
+                for x in jax.tree_util.tree_leaves(self.caches)
+            )
+        )

@@ -263,11 +263,70 @@ def test_lookup_nearest_picks_smallest_admissible_max_len(tmp_path):
     assert b.max_len == 64
     # nothing admissible: longer than every compiled bucket
     assert man.lookup_nearest(cfg, n_slots=2, max_len=512) is None
-    # slots must match exactly — no cross-slot substitution
+    # slot pools SMALLER than requested are never admissible (a request
+    # needs at least its slot count; only bigger pools substitute)
     assert man.lookup_nearest(cfg, n_slots=4, max_len=64) is None
     # dtype must match exactly
     other = dataclasses.replace(cfg, dtype="bfloat16")
     assert man.lookup_nearest(other, n_slots=2, max_len=64) is None
+
+
+def test_lookup_nearest_admits_bigger_slot_pools(tmp_path):
+    """Satellite: slots are the §4 shared objects — a bigger compiled pool
+    is admissible (just wasteful), so a fleet swept at slots=4 serves a
+    slots=2 request. Tie-break is footprint-aware: the smallest
+    unified_total among admissible buckets wins."""
+    cfg = get_reduced("qwen3-0.6b")
+    man = BundleManifest(tmp_path)
+    for n_slots in (4, 8):
+        man.publish(
+            bucket_key(cfg, n_slots=n_slots, max_len=64),
+            _bundle(cfg, n_slots=n_slots, max_len=64),
+        )
+    # no slots=2 bucket compiled: the smallest admissible pool serves
+    # (slots=4 has the smaller state plan, hence the smaller unified total)
+    key, b = man.lookup_nearest(cfg, n_slots=2, max_len=64)
+    assert b.n_slots == 4
+    assert "slots4" in key
+    # exact bucket still wins outright when it exists
+    man.publish(
+        bucket_key(cfg, n_slots=2, max_len=64),
+        _bundle(cfg, n_slots=2, max_len=64),
+    )
+    key, b = man.lookup_nearest(cfg, n_slots=2, max_len=64)
+    assert b.n_slots == 2
+    # both dimensions substitute together: slots=3/len=96 is served by the
+    # smallest-footprint bucket covering both
+    key, b = man.lookup_nearest(cfg, n_slots=3, max_len=63)
+    assert b.n_slots == 4 and b.max_len == 64
+
+
+def test_lookup_nearest_tie_breaks_on_unified_total(tmp_path):
+    """Between admissible buckets the SMALLEST unified footprint wins,
+    even when a longer max_len bucket happens to be leaner than a wider
+    slot pool."""
+    cfg = get_reduced("qwen3-0.6b")
+    man = BundleManifest(tmp_path)
+    lean = _bundle(cfg, n_slots=2, max_len=128)
+    fat = _bundle(cfg, n_slots=8, max_len=64)
+    assert lean.total_size < fat.total_size
+    man.publish(bucket_key(cfg, n_slots=2, max_len=128), lean)
+    man.publish(bucket_key(cfg, n_slots=8, max_len=64), fat)
+    key, b = man.lookup_nearest(cfg, n_slots=2, max_len=64)
+    assert b.n_slots == 2 and b.max_len == 128, key
+    # entries published at this revision carry the unified total, so
+    # selection ranks them without loading bundle files; older entries
+    # fall back to one memoized load per manifest handle
+    assert man.buckets()[key]["unified_total"] == lean.total_size
+    # an entry whose bundle file is unreadable must LOSE the ranking,
+    # not win it with a zero footprint
+    bad_key = bucket_key(cfg, n_slots=4, max_len=64)
+    index = json.loads((tmp_path / "manifest.json").read_text())
+    index["buckets"][bad_key] = {"file": "bundle-missing.json",
+                                 "fingerprint": "x"}
+    (tmp_path / "manifest.json").write_text(json.dumps(index))
+    key, b = man.lookup_nearest(cfg, n_slots=2, max_len=64)
+    assert b.n_slots == 2 and b.max_len == 128, key
 
 
 def test_resolve_bundle_miss_lists_compiled_buckets(tmp_path):

@@ -136,6 +136,36 @@ def test_serve_auto_selects_nearest_bucket(cfg, tmp_path):
     assert "compiled buckets" in stats["bundle_warning"]
 
 
+def test_serve_auto_selects_bigger_slot_pool(cfg, tmp_path):
+    """Satellite: a fleet compiled only at slots=4 serves a slots=2
+    request from the bigger pool (slots are the §4 shared objects — a
+    wider pool is admissible, just wasteful) with zero traces/plans/state
+    layouts; the engine reports the effective pool size."""
+    compile_and_publish(cfg, tmp_path, n_slots=4, max_len=MAX_LEN,
+                        command="pytest")
+    before = _counters()
+    stats = serve.run([
+        "--arch", ARCH, "--requests", "3", "--prompt-len", "3",
+        "--max-new", "2", "--slots", "2", "--max-len", str(MAX_LEN),
+        "--plan-bundle", str(tmp_path),
+    ])
+    assert _counters() == before
+    assert stats["plan_source"] == "bundle"
+    assert stats["requested_slots"] == 2
+    assert stats["effective_slots"] == 4
+    assert stats["tokens"] == 3 * 2
+    # one state allocation sized by the SERVED bucket's plan
+    assert stats["state_live_bytes"] == stats["state_planned_bytes"]
+    # --exact-bucket still disables the substitution
+    stats = serve.run([
+        "--arch", ARCH, "--requests", "1", "--prompt-len", "3",
+        "--max-new", "2", "--slots", "2", "--max-len", str(MAX_LEN),
+        "--plan-bundle", str(tmp_path), "--exact-bucket",
+    ])
+    assert stats["plan_source"] in ("planned", "cache")
+    assert stats["effective_slots"] == 2
+
+
 def test_serve_compile_first(tmp_path):
     out = tmp_path / "artifacts"
     stats = serve.run([

@@ -256,9 +256,10 @@ def test_session_miss_lists_compiled_buckets(tmp_path):
     )
     assert res.unified is None
     assert "manifest is empty" in res.warning
-    # a manifest with OTHER buckets: the warning lists what exists
+    # a manifest with OTHER (inadmissible: smaller pool, shorter cache)
+    # buckets: the warning lists what exists
     man = BundleManifest(tmp_path)
-    other_key = bucket_key(cfg, n_slots=8, max_len=128)
+    other_key = bucket_key(cfg, n_slots=1, max_len=16)
     (tmp_path / "manifest.json").write_text(json.dumps({
         "format_version": 1,
         "buckets": {other_key: {"file": "bundle-0.json"}},
@@ -306,6 +307,34 @@ def test_executor_accepts_unified_plan():
     up = UnifiedPlan(activation=probe.plan, state=None, fingerprint="x")
     ex = ArenaExecutor(fn, x, plan=up)
     assert ex.plan.total_size == probe.plan.total_size
+    assert ex.state_arena is None  # state-less plan: nothing materialized
     import numpy as np
 
     np.testing.assert_allclose(np.asarray(ex(x)), np.asarray(fn(x)), rtol=1e-6)
+
+
+def test_executor_materializes_state_arena_from_unified_plan():
+    """A full UnifiedPlan hands the executor the cross-step half too: a
+    host arena addressed by the same leaf_view_spec cells as the engine's
+    device residency, usable to store/read per-slot cache leaves."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.runtime.executor import ArenaExecutor
+
+    def fn(x):
+        return jnp.tanh(x @ x.T).sum(axis=0)
+
+    x = jnp.ones((4, 4), jnp.float32)
+    probe = ArenaExecutor(fn, x)
+    sp = plan_state(_state_records(), n_slots=2, max_len=8)
+    up = UnifiedPlan(activation=probe.plan, state=sp, fingerprint="x")
+    ex = ArenaExecutor(fn, x, plan=up)
+    assert ex.state_arena is not None
+    assert ex.state_arena.nbytes == sp.total_size
+    view = sp.leaf_view_spec()[0]
+    n = view.used_nbytes // 4
+    got = ex.state_arena.store(
+        view.tensor_id, np.arange(n, dtype=np.float32)
+    )
+    np.testing.assert_array_equal(got, np.arange(n, dtype=np.float32))
