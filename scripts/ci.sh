@@ -4,9 +4,10 @@
 #   ./scripts/ci.sh            # everything
 #   SKIP_BENCH=1 ./scripts/ci.sh   # tests only
 #
-# BENCH_planner.json / BENCH_search.json / BENCH_serve.json are the
-# committed perf trajectories — regenerate them here so planner, search,
-# and serving regressions show up in review diffs.
+# BENCH_planner.json / BENCH_search.json / BENCH_serve.json /
+# BENCH_throughput.json are the committed perf trajectories — regenerate
+# them here so planner, search, serving, and decode-throughput
+# regressions show up in review diffs.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -99,6 +100,31 @@ print("compile --all → serve: nearest-bucket auto-selection, "
       "residency differential clean")
 PY
 
+# scan-block serving: --block-size K must sync with the host EXACTLY once
+# per scan block (the HOST_SYNCS counter — same discipline as the
+# zero-trace/zero-plan asserts) and emit tokens byte-identical to the
+# single-wave host loop.
+python - <<'PY'
+from repro.launch import serve
+
+host = serve.run(["--requests", "3", "--prompt-len", "4", "--max-new", "6",
+                  "--slots", "2", "--max-len", "64"])
+block = serve.run(["--requests", "3", "--prompt-len", "4", "--max-new", "6",
+                   "--slots", "2", "--max-len", "64", "--block-size", "4"])
+assert block["host_syncs"] == block["blocks"], (
+    f"{block['host_syncs']} host syncs over {block['blocks']} scan blocks — "
+    f"the block path must sync exactly once per block"
+)
+assert block["host_syncs"] < host["host_syncs"], (host, block)
+assert block["tokens_per_request"] == host["tokens_per_request"], (
+    "greedy scan-block tokens diverged from the host loop"
+)
+assert block["slot_log"] == host["slot_log"]
+print(f"scan-block serve: {block['host_syncs']} syncs over "
+      f"{block['blocks']} blocks (host loop: {host['host_syncs']}), "
+      f"greedy tokens + slot log identical")
+PY
+
 if [[ -z "${SKIP_BENCH:-}" ]]; then
     python benchmarks/planner_scaling.py --quick --out BENCH_planner.json
     # order/fusion search smoke: asserts footprint <= baseline on every
@@ -108,4 +134,7 @@ if [[ -z "${SKIP_BENCH:-}" ]]; then
     # plan-artifact serving smoke: searched <= greedy on every arch,
     # bundle path does zero trace/plan work, cold-start numbers tracked
     python benchmarks/serve_bench.py --quick --out BENCH_serve.json
+    # decode-throughput smoke: scan-block vs host loop — greedy byte-
+    # identical, one host sync per block, block tokens/s > host tokens/s
+    python benchmarks/throughput_bench.py --quick --out BENCH_throughput.json
 fi

@@ -96,24 +96,61 @@ def _sha(payload: Any) -> str:
     return hashlib.sha256(text.encode()).hexdigest()
 
 
-def decode_fingerprint(cfg: "ArchConfig", *, n_slots: int, max_len: int) -> str:
+def serve_fingerprint(
+    *,
+    block_size: int = 1,
+    greedy: bool = True,
+    temperature: float = 1.0,
+    top_k: int = 0,
+) -> "dict | None":
+    """Canonical serve-loop payload for :func:`decode_fingerprint`: the
+    sampling knobs + scan block size that shape the compiled serving
+    graph (the scan length and the sampling ops live inside the decode
+    jit on the block path). Returns ``None`` for the default single-wave
+    greedy host loop so default fingerprints — and every pre-existing
+    bundle — are unchanged. Greedy canonicalizes ``temperature``/``top_k``
+    away (they do not shape the greedy graph); the sample seed never
+    joins (it is a traced key argument, not graph structure)."""
+    if greedy:
+        temperature, top_k = 1.0, 0
+    if block_size == 1 and greedy:
+        return None
+    return {
+        "block_size": int(block_size),
+        "greedy": bool(greedy),
+        "temperature": float(temperature),
+        "top_k": int(top_k),
+    }
+
+
+def decode_fingerprint(
+    cfg: "ArchConfig",
+    *,
+    n_slots: int,
+    max_len: int,
+    serve_params: "dict | None" = None,
+) -> str:
     """Hash of everything that shapes the decode-step graph, computable in
     microseconds — no trace, no planner. Covers the full architecture
     config (minus ``source``, a citation string that cannot affect any
-    tensor), the serving bucket (``n_slots``, ``max_len``), and the
-    pipeline/planner revisions."""
+    tensor), the serving bucket (``n_slots``, ``max_len``), the
+    pipeline/planner revisions, and — when the serving loop deviates from
+    the default greedy host loop — the :func:`serve_fingerprint` payload
+    (block size + sampling knobs), so bundles compiled for one serving
+    configuration self-invalidate under another."""
     cfg_obj = dataclasses.asdict(cfg)
     cfg_obj.pop("source", None)
-    return _sha(
-        {
-            "format_version": BUNDLE_FORMAT_VERSION,
-            "pipeline_revision": PIPELINE_REVISION,
-            "planner_revision": plan_io.PLANNER_REVISION,
-            "config": cfg_obj,
-            "n_slots": n_slots,
-            "max_len": max_len,
-        }
-    )
+    payload = {
+        "format_version": BUNDLE_FORMAT_VERSION,
+        "pipeline_revision": PIPELINE_REVISION,
+        "planner_revision": plan_io.PLANNER_REVISION,
+        "config": cfg_obj,
+        "n_slots": n_slots,
+        "max_len": max_len,
+    }
+    if serve_params:
+        payload["serve_params"] = serve_params
+    return _sha(payload)
 
 
 def graph_fingerprint(graph: "Graph") -> str:

@@ -312,6 +312,10 @@ class PlanSpec:
     cfg: "ArchConfig | None" = None
     n_slots: int | None = None
     max_len: int | None = None
+    # serve-loop identity (artifact.serve_fingerprint payload): block size
+    # + sampling knobs when the bucket targets the scan-block decode path;
+    # None = the default single-wave greedy host loop
+    serve_params: dict | None = None
     # strategy / search knobs
     mode: str = "offsets"
     strategy: str = "auto"
@@ -405,6 +409,8 @@ def _spec_fingerprint(spec: PlanSpec, records, state_records) -> str:
         "n_slots": spec.n_slots,
         "max_len": spec.max_len,
     }
+    if spec.serve_params:
+        payload["serve_params"] = spec.serve_params
     text = json.dumps(payload, sort_keys=True, separators=(",", ":"))
     return hashlib.sha256(text.encode()).hexdigest()
 
@@ -520,7 +526,8 @@ def plan(spec: PlanSpec) -> UnifiedPlan:
         from repro.core.artifact import decode_fingerprint
 
         fingerprint = decode_fingerprint(
-            spec.cfg, n_slots=spec.n_slots, max_len=spec.max_len
+            spec.cfg, n_slots=spec.n_slots, max_len=spec.max_len,
+            serve_params=spec.serve_params,
         )
     else:
         fingerprint = _spec_fingerprint(spec, records, spec.state_records)
@@ -612,15 +619,32 @@ class PlanSession:
         return cls(spec=spec)
 
     def resolve(
-        self, cfg: "ArchConfig", *, n_slots: int, max_len: int
+        self, cfg: "ArchConfig", *, n_slots: int, max_len: int,
+        serve_params: dict | None = None,
     ) -> Resolution:
+        """``serve_params`` is the engine's serve-loop fingerprint payload
+        (``artifact.serve_fingerprint``) — None for the default greedy
+        host loop; bundles compiled for a different serving configuration
+        fail the fingerprint check and fall back."""
         if self.spec is not None:
-            return self._resolve_spec(cfg, n_slots=n_slots, max_len=max_len)
-        return self._resolve_bundle(cfg, n_slots=n_slots, max_len=max_len)
+            return self._resolve_spec(
+                cfg, n_slots=n_slots, max_len=max_len,
+                serve_params=serve_params,
+            )
+        return self._resolve_bundle(
+            cfg, n_slots=n_slots, max_len=max_len, serve_params=serve_params
+        )
 
-    def _resolve_spec(self, cfg, *, n_slots: int, max_len: int) -> Resolution:
+    def _resolve_spec(
+        self, cfg, *, n_slots: int, max_len: int,
+        serve_params: dict | None = None,
+    ) -> Resolution:
         spec = dataclasses.replace(
-            self.spec, cfg=cfg, n_slots=n_slots, max_len=max_len
+            self.spec, cfg=cfg, n_slots=n_slots, max_len=max_len,
+            serve_params=(
+                serve_params if serve_params is not None
+                else self.spec.serve_params
+            ),
         )
         if spec.graph is None and spec.records is None:
             # knobs only — the engine traces, then plans with these knobs
@@ -633,7 +657,10 @@ class PlanSession:
             max_len=max_len, n_slots=n_slots, spec=spec,
         )
 
-    def _resolve_bundle(self, cfg, *, n_slots: int, max_len: int) -> Resolution:
+    def _resolve_bundle(
+        self, cfg, *, n_slots: int, max_len: int,
+        serve_params: dict | None = None,
+    ) -> Resolution:
         from repro.core import artifact
 
         nearest = self.nearest and self.manifest_dir is not None
@@ -671,7 +698,8 @@ class PlanSession:
         verify_len = bundle.max_len if nearest else max_len
         verify_slots = bundle.n_slots if nearest else n_slots
         expect = artifact.decode_fingerprint(
-            cfg, n_slots=verify_slots, max_len=verify_len
+            cfg, n_slots=verify_slots, max_len=verify_len,
+            serve_params=serve_params,
         )
         if bundle.fingerprint != expect:
             return Resolution(

@@ -55,6 +55,7 @@ from repro.core.artifact import (
     PlanBundle,
     bucket_key,
     graph_fingerprint,
+    serve_fingerprint,
 )
 from repro.core.fusion_search import FusionSearchResult
 from repro.core.graph import Graph
@@ -163,9 +164,25 @@ def compile_decode_plan(
     fusion_rounds: int = 40,
     cache: PlanCache | None = None,
     measure_xla: bool = True,
+    block_size: int = 1,
+    greedy: bool = True,
+    temperature: float = 1.0,
+    top_k: int = 0,
 ) -> CompileResult:
-    """Trace → unified plan (both halves) → validate → bundle, in memory."""
+    """Trace → unified plan (both halves) → validate → bundle, in memory.
+
+    ``block_size``/``greedy``/``temperature``/``top_k`` are the serving
+    bucket's serve-loop configuration: they join the bundle fingerprint
+    (``artifact.serve_fingerprint``), so a bundle compiled for the
+    scan-block path self-invalidates against a default host-loop engine
+    and vice versa. The planned layouts themselves do not change — the
+    decode body traced for planning is the same graph the scan body
+    iterates."""
     wall0 = time.perf_counter()
+    serve_params = serve_fingerprint(
+        block_size=block_size, greedy=greedy,
+        temperature=temperature, top_k=top_k,
+    )
     decode, specs = _decode_specs(cfg, n_slots=n_slots, max_len=max_len)
     graph = trace_graph(decode, *specs, name=f"{cfg.name}-decode")
     # the shape-level cache pytree (specs[2]) feeds the cross-step half
@@ -177,6 +194,7 @@ def compile_decode_plan(
         cfg=cfg,
         n_slots=n_slots,
         max_len=max_len,
+        serve_params=serve_params,
         strategy=strategy,
         search=search,
         search_iters=search_iters,
@@ -194,6 +212,8 @@ def compile_decode_plan(
             if measure_xla else None
         ),
     }
+    if serve_params:
+        provenance["serve_params"] = serve_params
     bundle = PlanBundle(
         fingerprint=unified.fingerprint,
         graph_fingerprint=graph_fingerprint(graph),
@@ -313,6 +333,14 @@ def main() -> None:
     ap.add_argument("--iters", type=int, default=300,
                     help="order-search annealing iterations")
     ap.add_argument("--fusion-rounds", type=int, default=40)
+    ap.add_argument("--block-size", type=int, default=1,
+                    help="serve-loop block size the bundle is compiled "
+                         "for (joins the fingerprint; 1 = host loop)")
+    ap.add_argument("--sample", action="store_true",
+                    help="compile for temperature/top-k sampling instead "
+                         "of greedy (joins the fingerprint)")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--out", default=DEFAULT_BUNDLE_DIR,
                     help="bundle manifest directory")
     ap.add_argument("--json", action="store_true",
@@ -331,6 +359,8 @@ def main() -> None:
             dtypes=args.dtypes,
             strategy=args.strategy, search=args.search,
             search_iters=args.iters, fusion_rounds=args.fusion_rounds,
+            block_size=args.block_size, greedy=not args.sample,
+            temperature=args.temperature, top_k=args.top_k,
             command=command,
         )
         print(f"published {len(results)} bucket(s) to {args.out}/")
@@ -348,6 +378,8 @@ def main() -> None:
         n_slots=args.slots, max_len=args.max_len,
         strategy=args.strategy, search=args.search,
         search_iters=args.iters, fusion_rounds=args.fusion_rounds,
+        block_size=args.block_size, greedy=not args.sample,
+        temperature=args.temperature, top_k=args.top_k,
         command=command,
     )
     print(res.summary())

@@ -17,6 +17,14 @@ selection off.
 starting the engine (the one-command demo of compile→artifact→serve);
 ``--compare-cold-start`` additionally constructs a plan-at-construction
 engine to print both cold-start times side by side.
+
+Serving-loop knobs: ``--block-size K`` serves K decode waves per host
+sync (the lax.scan block path with on-device sampling + stop detection —
+one host sync per block instead of one per wave); ``--sample`` switches
+greedy argmax to temperature/top-k sampling (``--temperature``,
+``--top-k``, ``--seed``); ``--eos-id`` retires a request when it emits
+that token. Block size and sampling knobs join the decode fingerprint,
+so ``--compile-first`` publishes a bundle that matches them.
 """
 
 from __future__ import annotations
@@ -57,6 +65,20 @@ def run(argv: list[str] | None = None) -> dict:
     ap.add_argument("--compare-cold-start", action="store_true",
                     help="also time a plan-at-construction engine so the "
                          "artifact's cold-start win is printed side by side")
+    ap.add_argument("--block-size", type=int, default=1,
+                    help="decode waves per host sync (1 = single-wave host "
+                         "loop; K > 1 = lax.scan block decode with "
+                         "on-device sampling and stop detection)")
+    ap.add_argument("--sample", action="store_true",
+                    help="temperature/top-k sampling instead of greedy "
+                         "argmax")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sample seed (per-slot jax.random keys on the "
+                         "block path)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="retire a request when it emits this token")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch) if args.full else get_reduced(args.arch)
@@ -72,6 +94,8 @@ def run(argv: list[str] | None = None) -> dict:
         res = compile_and_publish(
             cfg, bundle_dir, n_slots=args.slots, max_len=args.max_len,
             command="launch/serve.py --compile-first",
+            block_size=args.block_size, greedy=not args.sample,
+            temperature=args.temperature, top_k=args.top_k,
         )
         print(f"compiled plan bundle in {time.perf_counter() - t0:.2f}s: "
               f"{res.bundle.summary()}")
@@ -92,6 +116,9 @@ def run(argv: list[str] | None = None) -> dict:
     engine = InferenceEngine(
         cfg, params, n_slots=args.slots, max_len=args.max_len,
         session=session,
+        greedy=not args.sample, sample_seed=args.seed,
+        temperature=args.temperature, top_k=args.top_k,
+        eos_id=args.eos_id, block_size=args.block_size,
     )
     cold_start_s = time.perf_counter() - t0
     report = engine.memory_report
@@ -127,12 +154,20 @@ def run(argv: list[str] | None = None) -> dict:
             rng.integers(0, cfg.vocab, size=args.prompt_len).astype(np.int32),
             max_new_tokens=args.max_new,
         )
+    from repro.runtime import engine as engine_mod
+
+    syncs0 = engine_mod.HOST_SYNCS
     t0 = time.perf_counter()
     done = engine.run_until_done()
     wall = time.perf_counter() - t0
+    host_syncs = engine_mod.HOST_SYNCS - syncs0
     toks = sum(len(r.tokens) for r in done)
     print(f"--- served {len(done)} requests, {toks} tokens in {wall:.2f}s "
-          f"({toks / wall:.1f} tok/s, {engine._wave} waves) ---")
+          f"({toks / wall:.1f} tok/s, {engine._wave} waves, "
+          f"{host_syncs} host syncs"
+          + (f" over {engine.n_blocks} scan blocks"
+             if args.block_size > 1 else "")
+          + ") ---")
     for r in done[:3]:
         print(f"req {r.request_id}: waves [{r.admitted_wave},{r.finished_wave}] "
               f"tokens {r.tokens[:8]}...")
@@ -148,6 +183,10 @@ def run(argv: list[str] | None = None) -> dict:
         "tokens": toks,
         "tokens_per_request": {r.request_id: list(r.tokens) for r in done},
         "waves": engine._wave,
+        "tokens_per_s": toks / wall if wall > 0 else None,
+        "host_syncs": host_syncs,
+        "blocks": engine.n_blocks,
+        "block_size": args.block_size,
         "slot_log": list(engine.slot_log),
         "cold_start_s": cold_start_s,
         "cold_start_noartifact_s": cold_start_noartifact_s,

@@ -35,6 +35,27 @@ feature. At engine construction we:
 The decode step itself is jit-compiled once; the engine never reallocates
 its buffers (the state buffer is a donated jit argument, so the decode
 writes each wave's new state into the same physical allocation).
+
+Two serving loops share that state:
+
+* the single-wave HOST loop (``block_size=1``, the default): one decode
+  dispatch + one host sync per wave, numpy sampling on the host. This is
+  the correctness oracle;
+* the SCAN-BLOCK loop (``block_size=K``): K decode waves per dispatch via
+  ``lax.scan`` over the donated state buffer, with sampling (greedy
+  argmax or temperature/top-k with per-slot ``jax.random`` keys) and
+  stop detection (EOS / token budget / max_len, a per-slot ``done`` mask
+  freezing finished slots mid-block) folded into the jit — ONE host sync
+  per block (``HOST_SYNCS`` counts them, same discipline as the
+  zero-trace/zero-plan counters). ``run_until_done`` additionally
+  pipelines blocks: when nothing is queued, the next block is dispatched
+  — chained on the in-flight block's device carry — BEFORE the previous
+  block's results are fetched, so host admit/retire bookkeeping overlaps
+  device compute. Greedy block decode is byte-identical to the host loop
+  (the block-length policy lands predictable finishes on block ends, so
+  admission waves match too); sampled block decode is reproducible under
+  a fixed seed and invariant to the block size (keys advance per
+  emission, not per wave).
 """
 
 from __future__ import annotations
@@ -49,7 +70,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.artifact import PlanBundle, decode_fingerprint
+from repro.core.artifact import (
+    PlanBundle,
+    decode_fingerprint,
+    serve_fingerprint,
+)
 from repro.core.graph import Graph
 from repro.core.planner import MemoryPlan, plan_graph
 from repro.core.unified import (
@@ -63,12 +88,30 @@ from repro.core.unified import (
 from repro.models.api import Model
 from repro.runtime.arena import Arena
 from repro.runtime.residency import (
+    BlockOut,
     PytreeState,
     ResidentState,
     StateResidency,
     residency_enabled,
 )
+from repro.runtime.sampling import SamplingParams, TokenSampler, host_probs
 from repro.trace.jaxpr_liveness import trace_graph
+
+# Decode-phase host synchronization points, module-wide (the same
+# counter discipline as tracer.TRACE_CALLS / planner.PLAN_CALLS /
+# unified.STATE_PLAN_CALLS): +1 per host-loop wave, +1 per scan block —
+# CI pins host syncs per scan block to exactly 1. Prefill dispatches are
+# not counted (they are per-prompt-token by construction).
+HOST_SYNCS = 0
+
+
+class WavesExhaustedError(RuntimeError):
+    """``run_until_done`` ran out of its wave budget with requests still
+    active or queued; ``unfinished`` carries them."""
+
+    def __init__(self, msg: str, unfinished: "list[Request]"):
+        super().__init__(msg)
+        self.unfinished = unfinished
 
 
 @dataclasses.dataclass
@@ -80,6 +123,22 @@ class Request:
     admitted_wave: int = -1  # wave at which the request took a slot
     tokens: list[int] = dataclasses.field(default_factory=list)
     finished_wave: int = -1
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """A dispatched-but-not-absorbed scan block: the device handles, the
+    wave span it covers, the slot->request snapshot at dispatch time, and
+    the PREDICTED per-slot waves remaining after it (budget/max_len only —
+    EOS can shorten a slot's run but never extend it), which is what the
+    chained pre-dispatch sizes the next block from without a host sync."""
+
+    out: BlockOut
+    base_wave: int
+    length: int
+    active_dev: Any  # device bool mask this block was dispatched with
+    slots: dict[int, "Request"]
+    rem_after: dict[int, int]
 
 
 @dataclasses.dataclass
@@ -225,6 +284,14 @@ class InferenceEngine:
         session: PlanSession | None = None,
         greedy: bool = True,
         sample_seed: int | None = 0,
+        temperature: float = 1.0,
+        top_k: int = 0,
+        # retire a slot when it emits this token (None = length-only)
+        eos_id: int | None = None,
+        # decode waves per host sync: 1 = the single-wave host loop
+        # (numpy sampling, the oracle); K > 1 = lax.scan block decode
+        # with on-device sampling + stop detection
+        block_size: int = 1,
         # None -> the REPRO_STATE_RESIDENCY env knob (default: on)
         state_residency: bool | None = None,
         # deprecated plan-source kwargs — use session=PlanSession...
@@ -247,11 +314,28 @@ class InferenceEngine:
         self.params = params
         self.greedy = greedy
         self.session = session
+        self.eos_id = None if eos_id is None else int(eos_id)
+        self.block_size = int(block_size)
+        if self.block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.sampling = SamplingParams(
+            greedy=greedy, temperature=float(temperature), top_k=int(top_k)
+        )
+        self.temperature = self.sampling.temperature
+        self.top_k = self.sampling.top_k
+        # the part of the serve config that shapes the compiled graph —
+        # joins the decode fingerprint so bundles self-invalidate across
+        # serving configurations (None = default greedy host loop)
+        self._serve_params = serve_fingerprint(
+            block_size=self.block_size, greedy=greedy,
+            temperature=self.temperature, top_k=self.top_k,
+        )
         # ONE engine-owned generator: a per-slot default_rng(self._wave)
         # gave every slot in a wave the same seed, so slots with identical
         # logits always emitted identical tokens and reruns were trivially
         # correlated
         self._sampler = np.random.default_rng(sample_seed)
+        self._sample_seed = sample_seed
 
         # --- the unified plan for this serving bucket -------------------
         # The session is the single plan source: a precompiled v2 bundle
@@ -265,7 +349,10 @@ class InferenceEngine:
         # wider slot pool (n_slots >= requested — a bigger §4 shared-object
         # pool is admissible, just wasteful); the engine serves that pool.
         resolution = (
-            session.resolve(cfg, n_slots=n_slots, max_len=max_len)
+            session.resolve(
+                cfg, n_slots=n_slots, max_len=max_len,
+                serve_params=self._serve_params,
+            )
             if session is not None
             else None
         )
@@ -374,7 +461,8 @@ class InferenceEngine:
                 unified.fingerprint
                 if unified is not None
                 else decode_fingerprint(
-                    cfg, n_slots=n_slots, max_len=self.max_len
+                    cfg, n_slots=n_slots, max_len=self.max_len,
+                    serve_params=self._serve_params,
                 )
             ),
         )
@@ -437,6 +525,13 @@ class InferenceEngine:
         # (slot, first_wave, last_wave, request_id)
         self.slot_log: list[tuple[int, int, int, int]] = []
         self._next_rid = 0
+        # scan-block serving state: the on-device sampler (closed over by
+        # the block jit), per-slot PRNG keys (lazy — only the block path
+        # or on-device sampling needs them), and the block counter the
+        # throughput bench pairs with HOST_SYNCS
+        self._token_sampler = TokenSampler(self.sampling, max_len=self.max_len)
+        self._keys = None
+        self.n_blocks = 0
 
     # ------------------------------------------------------------ admin
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
@@ -499,14 +594,29 @@ class InferenceEngine:
     def _sample_token(self, row: np.ndarray) -> int:
         """Greedy argmax, or a draw from the engine-owned generator (so
         consecutive draws — e.g. two slots in one wave — are independent,
-        while a fixed ``sample_seed`` keeps whole runs reproducible)."""
+        while a fixed ``sample_seed`` keeps whole runs reproducible).
+        Probabilities come from the float64 ``sampling.host_probs`` —
+        the float32 softmax tripped ``Generator.choice``'s sum-to-1
+        check on rounding."""
         if self.greedy:
             return int(row.argmax())
-        return int(self._sampler.choice(len(row), p=_softmax(row)))
+        p = host_probs(row, temperature=self.temperature, top_k=self.top_k)
+        return int(self._sampler.choice(len(p), p=p))
+
+    def _finished(self, req: Request, slot: int, nxt: int) -> bool:
+        """The retirement oracle, shared by the host loop and the block
+        absorber (the on-device stop detection mirrors exactly this):
+        EOS, exhausted new-token budget, or the context limit."""
+        return (
+            (self.eos_id is not None and nxt == self.eos_id)
+            or len(req.tokens) >= req.max_new_tokens
+            or int(self._slot_pos[slot]) >= self.max_len - 1
+        )
 
     # ------------------------------------------------------------ serve
     def step(self) -> list[Request]:
         """One decode wave over all active slots; returns finished reqs."""
+        global HOST_SYNCS
         self._admit()
         if not self._active:
             return []
@@ -514,6 +624,7 @@ class InferenceEngine:
         for s in self._active:
             active[s] = True
         logits = self._step_tokens(self._slot_tokens, self._slot_pos, active)
+        HOST_SYNCS += 1
         finished: list[Request] = []
         for slot, req in list(self._active.items()):
             row = np.asarray(logits[slot])
@@ -521,10 +632,7 @@ class InferenceEngine:
             req.tokens.append(nxt)
             self._slot_tokens[slot, 0] = nxt
             self._slot_pos[slot] += 1
-            if (
-                len(req.tokens) >= req.max_new_tokens
-                or self._slot_pos[slot] >= self.max_len - 1
-            ):
+            if self._finished(req, slot, nxt):
                 req.finished_wave = self._wave
                 self.slot_log.append(
                     (slot, req.admitted_wave, self._wave, req.request_id)
@@ -534,16 +642,199 @@ class InferenceEngine:
         self._wave += 1
         return finished
 
-    def run_until_done(self, max_waves: int = 10_000) -> list[Request]:
+    # ----------------------------------------------------- block serve
+    def _ensure_keys(self):
+        if self._keys is None:
+            seed = (
+                self._sample_seed
+                if self._sample_seed is not None
+                else int(np.random.default_rng().integers(2**31 - 1))
+            )
+            self._keys = self._token_sampler.init_keys(seed, self.n_slots)
+        return self._keys
+
+    def _remaining_waves(self) -> dict[int, int]:
+        """Per-active-slot PREDICTABLE waves left (new-token budget and
+        max_len; EOS can only shorten a run, never extend it)."""
+        rem = {}
+        for slot, req in self._active.items():
+            budget = req.max_new_tokens - len(req.tokens)
+            len_cap = max((self.max_len - 1) - int(self._slot_pos[slot]), 1)
+            rem[slot] = max(min(budget, len_cap), 1)
+        return rem
+
+    def _plan_block(self, waves_left: int | None = None) -> int:
+        """This block's scan length K: capped by the LONGEST predictable
+        remaining run (no all-frozen tail waves) and — when requests are
+        queued — by the SHORTEST one, so predictable finishes land on the
+        block's last wave and admission happens at exactly the same wave
+        as the single-wave host loop (the differential-test schedule
+        contract). A mid-block EOS still freezes its slot until the block
+        ends; with a non-empty queue that defers the slot's re-admission
+        by < block_size waves (the one scheduling deviation from the
+        host loop — tokens are unaffected)."""
+        rem = self._remaining_waves()
+        k = min(self.block_size, max(rem.values()))
+        if self._queue:
+            k = min(k, min(rem.values()))
+        if waves_left is not None:
+            k = min(k, waves_left)
+        return max(k, 1)
+
+    def _dispatch_block(self, k: int) -> _Inflight:
+        """Launch K scan waves WITHOUT a host sync. Every input is copied
+        to a fresh device array before dispatch — the host keeps mutating
+        its numpy mirrors while the block is in flight (the _step_tokens
+        race note, applied to the async path)."""
+        active = np.zeros(self.n_slots, bool)
+        budget = np.zeros(self.n_slots, np.int32)
+        rem = self._remaining_waves()
+        for slot, req in self._active.items():
+            active[slot] = True
+            budget[slot] = req.max_new_tokens - len(req.tokens)
+        active_dev = jnp.array(active)
+        out = self.state.decode_block(
+            self.params,
+            jnp.array(self._slot_tokens),
+            jnp.array(self._slot_pos, jnp.int32),
+            active_dev,
+            jnp.zeros(self.n_slots, bool),
+            jnp.array(budget),
+            self._ensure_keys(),
+            jnp.int32(-1 if self.eos_id is None else self.eos_id),
+            length=k,
+            sampler=self._token_sampler,
+        )
+        self._keys = out.keys
+        return _Inflight(
+            out=out, base_wave=self._wave, length=k, active_dev=active_dev,
+            slots=dict(self._active),
+            rem_after={s: max(r - k, 0) for s, r in rem.items()},
+        )
+
+    def _dispatch_chained(self, prev: _Inflight, k: int) -> _Inflight:
+        """Launch the NEXT block off the in-flight block's device carry —
+        no host sync between the two dispatches. Only valid when nothing
+        is queued (the carry's ``done`` mask already freezes every slot
+        that finished mid-stream, and no admission can be pending)."""
+        out = self.state.decode_block(
+            self.params, prev.out.tokens, prev.out.pos, prev.active_dev,
+            prev.out.done, prev.out.budget, self._keys,
+            jnp.int32(-1 if self.eos_id is None else self.eos_id),
+            length=k, sampler=self._token_sampler,
+        )
+        self._keys = out.keys
+        return _Inflight(
+            out=out, base_wave=prev.base_wave + prev.length, length=k,
+            active_dev=prev.active_dev, slots=prev.slots,
+            rem_after={s: max(r - k, 0) for s, r in prev.rem_after.items()},
+        )
+
+    def _absorb_block(self, inflight: _Inflight) -> list[Request]:
+        """Fetch one block's per-wave outputs (THE one host sync per
+        block) and replay them through the host bookkeeping — the same
+        retirement oracle as the host loop, wave by wave, so slot_log
+        intervals and finish waves mean the same thing in both modes."""
+        global HOST_SYNCS
+        HOST_SYNCS += 1
+        self.n_blocks += 1
+        toks = np.asarray(inflight.out.wave_tokens)
+        emitted = np.asarray(inflight.out.emitted)
+        finished: list[Request] = []
+        for k in range(inflight.length):
+            wave = inflight.base_wave + k
+            for slot, req in inflight.slots.items():
+                if self._active.get(slot) is not req or not emitted[k, slot]:
+                    continue
+                nxt = int(toks[k, slot])
+                req.tokens.append(nxt)
+                self._slot_tokens[slot, 0] = nxt
+                self._slot_pos[slot] += 1
+                if self._finished(req, slot, nxt):
+                    req.finished_wave = wave
+                    self.slot_log.append(
+                        (slot, req.admitted_wave, wave, req.request_id)
+                    )
+                    finished.append(req)
+                    del self._active[slot]
+        self._wave = inflight.base_wave + inflight.length
+        return finished
+
+    def step_block(self) -> list[Request]:
+        """One synchronous scan block: admit, dispatch K waves, absorb.
+        (``run_until_done`` pipelines these — it chains the next block's
+        dispatch before fetching the previous block's results whenever
+        the queue is empty.)"""
+        self._admit()
+        if not self._active:
+            return []
+        return self._absorb_block(self._dispatch_block(self._plan_block()))
+
+    def _run_blocks(self, max_waves: int) -> list[Request]:
         done: list[Request] = []
-        for _ in range(max_waves):
-            done.extend(self.step())
-            if not self._active and not self._queue:
+        waves_left = max_waves
+        inflight: _Inflight | None = None
+        while True:
+            if inflight is None:
+                self._admit()
+                if not self._active or waves_left <= 0:
+                    break
+                k = self._plan_block(waves_left)
+                inflight = self._dispatch_block(k)
+                waves_left -= k
+            # async admission/retirement: with nothing queued, no host
+            # decision can change the next block's inputs — chain its
+            # dispatch off the in-flight carry BEFORE fetching, so the
+            # absorb below overlaps device compute
+            nxt: _Inflight | None = None
+            if not self._queue and waves_left > 0:
+                rem = [r for r in inflight.rem_after.values() if r > 0]
+                if rem:
+                    k2 = min(self.block_size, max(rem), waves_left)
+                    nxt = self._dispatch_chained(inflight, k2)
+                    waves_left -= k2
+            done.extend(self._absorb_block(inflight))
+            inflight = nxt
+            if inflight is None and not self._active and not self._queue:
                 break
+        return done
+
+    def unfinished_requests(self) -> list[Request]:
+        """Requests still holding a slot or waiting in the queue —
+        surfaced when ``run_until_done`` exhausts its wave budget."""
+        return list(self._active.values()) + list(self._queue)
+
+    def run_until_done(
+        self, max_waves: int = 10_000, *, raise_on_exhausted: bool = False
+    ) -> list[Request]:
+        """Serve until queue and slots drain (or ``max_waves`` decode
+        waves run). Exhausting the wave budget with work remaining warns
+        — or raises :class:`WavesExhaustedError` with the unfinished
+        requests attached under ``raise_on_exhausted=True`` — instead of
+        silently returning partial results."""
+        done: list[Request] = []
+        if self.block_size <= 1:
+            for _ in range(max_waves):
+                done.extend(self.step())
+                if not self._active and not self._queue:
+                    break
+        else:
+            done.extend(self._run_blocks(max_waves))
+        if self._active or self._queue:
+            msg = (
+                f"run_until_done exhausted max_waves={max_waves} with "
+                f"{len(self._active)} active and {len(self._queue)} queued "
+                f"request(s) unfinished"
+            )
+            if raise_on_exhausted:
+                raise WavesExhaustedError(msg, self.unfinished_requests())
+            warnings.warn(msg, RuntimeWarning, stacklevel=2)
         return done
 
 
 def _softmax(x: np.ndarray) -> np.ndarray:
-    x = x - x.max()
-    e = np.exp(x)
-    return e / e.sum()
+    """Backwards-compatible alias of :func:`repro.runtime.sampling.softmax`
+    (float64 + explicit renormalization — see the bugfix note there)."""
+    from repro.runtime.sampling import softmax
+
+    return softmax(x)

@@ -32,6 +32,7 @@ the cold-start path.
 
 from __future__ import annotations
 
+import dataclasses
 import os
 from typing import Any
 
@@ -204,6 +205,41 @@ class StateResidency:
         return buf
 
 
+@dataclasses.dataclass
+class BlockOut:
+    """Device handles from one scan-block dispatch — NOTHING here has
+    been fetched. ``tokens``/``pos``/``done``/``budget``/``keys`` are the
+    post-block carry (the engine chains the next block's dispatch off
+    them without a host sync); ``wave_tokens``/``emitted`` are the
+    per-wave outputs the engine fetches once per block when absorbing."""
+
+    tokens: Any  # (n_slots, 1) int32 — last token per slot
+    pos: Any  # (n_slots,) int32
+    done: Any  # (n_slots,) bool — stopped mid-block (EOS/budget/max_len)
+    budget: Any  # (n_slots,) int32 — remaining new-token budget
+    keys: Any  # (n_slots, 2) uint32 — per-slot PRNG keys
+    wave_tokens: Any  # (K, n_slots) int32 — token chosen at each wave
+    emitted: Any  # (K, n_slots) bool — slot actually emitted at that wave
+
+
+def _block_wave(model, sampler, params, caches, tokens, pos, active, done,
+                budget, keys, eos):
+    """One scan wave, shared by both backends (only the state threading
+    differs): decode at ``active & ~done``, then the sampler's on-device
+    token selection + stop bookkeeping. Inactive/frozen slots keep their
+    token and position, so the cache scatter stays idempotent for them —
+    the same invariant the host loop relies on."""
+    step_active = active & jnp.logical_not(done)
+    logits, new_caches = model.decode_step(
+        params, tokens, caches, pos, active=step_active
+    )
+    keys, tokens, pos, done, budget = sampler.advance(
+        logits, keys, tokens, pos, step_active, done, budget, eos
+    )
+    carry = (tokens, pos, done, budget, keys)
+    return new_caches, carry, (tokens[:, 0], step_active)
+
+
 class ResidentState:
     """Serving backend: cross-step state donate-threaded as ONE buffer.
 
@@ -223,6 +259,7 @@ class ResidentState:
         self.buf = residency.init_buffer(init_caches)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(2,))
         self._reset = jax.jit(self._reset_impl, donate_argnums=(0,))
+        self._block_jits: dict[int, Any] = {}  # scan length -> jit
 
     def _decode_impl(self, params, tokens, buf, pos, active):
         caches = self._residency.unpack(buf)
@@ -245,6 +282,44 @@ class ResidentState:
     def reset(self, keep):
         self.buf = self._reset(self.buf, jnp.array(keep))
         jax.block_until_ready(self.buf)
+
+    def decode_block(self, params, tokens, pos, active, done, budget, keys,
+                     eos, *, length, sampler) -> BlockOut:
+        """``length`` decode waves in ONE dispatch: ``lax.scan`` over the
+        DONATED state buffer with on-device sampling and stop detection.
+        Returns device handles only — no host sync here; the engine
+        fetches the per-wave outputs when it absorbs the block, and may
+        chain the next block's dispatch off the returned carry first."""
+        jitted = self._block_jits.get(length)
+        if jitted is None:
+            resid, model = self._residency, self.model
+
+            def impl(params, buf, tokens, pos, active, done, budget, keys,
+                     eos):
+                def body(carry, _):
+                    buf, tokens, pos, done, budget, keys = carry
+                    caches = resid.unpack(buf)
+                    new_caches, (tokens, pos, done, budget, keys), out = (
+                        _block_wave(model, sampler, params, caches, tokens,
+                                    pos, active, done, budget, keys, eos)
+                    )
+                    buf = resid.pack(new_caches, buf)
+                    return (buf, tokens, pos, done, budget, keys), out
+
+                carry, (toks, emitted) = jax.lax.scan(
+                    body, (buf, tokens, pos, done, budget, keys), None,
+                    length=length,
+                )
+                return carry, toks, emitted
+
+            jitted = jax.jit(impl, donate_argnums=(1,))
+            self._block_jits[length] = jitted
+        carry, toks, emitted = jitted(
+            params, self.buf, tokens, pos, active, done, budget, keys, eos
+        )
+        self.buf, tokens, pos, done, budget, keys = carry
+        return BlockOut(tokens=tokens, pos=pos, done=done, budget=budget,
+                        keys=keys, wave_tokens=toks, emitted=emitted)
 
     @property
     def caches(self) -> Any:
@@ -273,6 +348,7 @@ class PytreeState:
             )
         )
         self._reset = jax.jit(lambda c, keep: model.reset_slots(c, keep))
+        self._block_jits: dict[int, Any] = {}  # scan length -> jit
 
     def decode(self, params, tokens, pos, active):
         logits, self.caches = self._decode(
@@ -284,6 +360,40 @@ class PytreeState:
 
     def reset(self, keep):
         self.caches = self._reset(self.caches, jnp.array(keep))
+
+    def decode_block(self, params, tokens, pos, active, done, budget, keys,
+                     eos, *, length, sampler) -> BlockOut:
+        """Scan-block decode over the XLA-allocated cache pytree — the
+        same contract as :meth:`ResidentState.decode_block` (the block
+        path works with residency off; the buffer just isn't donated)."""
+        jitted = self._block_jits.get(length)
+        if jitted is None:
+            model = self.model
+
+            def impl(params, caches, tokens, pos, active, done, budget,
+                     keys, eos):
+                def body(carry, _):
+                    caches, tokens, pos, done, budget, keys = carry
+                    caches, (tokens, pos, done, budget, keys), out = (
+                        _block_wave(model, sampler, params, caches, tokens,
+                                    pos, active, done, budget, keys, eos)
+                    )
+                    return (caches, tokens, pos, done, budget, keys), out
+
+                carry, (toks, emitted) = jax.lax.scan(
+                    body, (caches, tokens, pos, done, budget, keys), None,
+                    length=length,
+                )
+                return carry, toks, emitted
+
+            jitted = jax.jit(impl)
+            self._block_jits[length] = jitted
+        carry, toks, emitted = jitted(
+            params, self.caches, tokens, pos, active, done, budget, keys, eos
+        )
+        self.caches, tokens, pos, done, budget, keys = carry
+        return BlockOut(tokens=tokens, pos=pos, done=done, budget=budget,
+                        keys=keys, wave_tokens=toks, emitted=emitted)
 
     @property
     def live_bytes(self) -> int:

@@ -6,6 +6,8 @@ requests share a batch, arrive staggered, and reuse slots (active-mask
 and per-slot-position correctness, incl. frozen mamba states).
 """
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -211,3 +213,114 @@ def test_engine_memory_report():
     assert engine.state_layout.total_size == rep.state_plan.total_size
     assert engine.unified_plan.activation is plan
     assert engine.unified_plan.state is rep.state_plan
+
+
+def test_host_loop_retires_on_eos():
+    """Regression (bugfix): the host loop never retired a request on EOS
+    — only the max_new/max_len budgets ended it. With ``eos_id`` set, the
+    request must stop at the FIRST emission of that token."""
+    cfg = get_reduced("qwen3-0.6b")
+    model = Model.for_config(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab, size=4).astype(np.int32)
+
+    ref_engine = InferenceEngine(cfg, params, n_slots=1, max_len=64)
+    ref_engine.submit(prompt, max_new_tokens=10)
+    ref = list(ref_engine.run_until_done()[0].tokens)
+    assert len(ref) == 10, "no eos_id: the full budget is served"
+
+    eos = ref[2]
+    engine = InferenceEngine(cfg, params, n_slots=1, max_len=64,
+                             eos_id=int(eos))
+    engine.submit(prompt, max_new_tokens=10)
+    got = list(engine.run_until_done()[0].tokens)
+    assert got == ref[: ref.index(eos) + 1], (
+        "request must retire at the first EOS emission, inclusive"
+    )
+
+
+def test_run_until_done_surfaces_exhausted_waves():
+    """Regression (bugfix): ``run_until_done(max_waves=...)`` silently
+    returned partial results. It must warn (or raise with the flag) and
+    surface the unfinished requests."""
+    cfg = get_reduced("qwen3-0.6b")
+    model = Model.for_config(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab, size=4).astype(np.int32)
+
+    engine = InferenceEngine(cfg, params, n_slots=1, max_len=64)
+    engine.submit(prompt, max_new_tokens=8)
+    engine.submit(prompt, max_new_tokens=8)  # queued behind the one slot
+    with pytest.warns(RuntimeWarning, match="exhausted max_waves"):
+        done = engine.run_until_done(max_waves=5)
+    unfinished = engine.unfinished_requests()
+    assert len(done) + len(unfinished) == 2
+    assert len(unfinished) >= 1
+
+    from repro.runtime.engine import WavesExhaustedError
+
+    engine2 = InferenceEngine(cfg, params, n_slots=1, max_len=64)
+    engine2.submit(prompt, max_new_tokens=8)
+    engine2.submit(prompt, max_new_tokens=8)
+    with pytest.raises(WavesExhaustedError) as ei:
+        engine2.run_until_done(max_waves=5, raise_on_exhausted=True)
+    assert len(ei.value.unfinished) >= 1
+
+    # a sufficient budget completes silently, with nothing left over
+    engine3 = InferenceEngine(cfg, params, n_slots=1, max_len=64)
+    engine3.submit(prompt, max_new_tokens=8)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        done = engine3.run_until_done()
+    assert len(done) == 1 and not engine3.unfinished_requests()
+
+
+def _float32_softmax(row):
+    # the pre-fix implementation: float32 throughout, no renormalization
+    x = row - row.max()
+    e = np.exp(x)
+    return e / e.sum()
+
+
+def test_sample_probabilities_survive_generator_choice_tolerance():
+    """Regression (bugfix): the float32 ``_softmax`` produced probability
+    vectors whose float64 sum drifts past ``Generator.choice``'s strict
+    tolerance (~1.5e-8) and raised "probabilities do not sum to 1". The
+    fixed path computes in float64 and renormalizes explicitly."""
+    cfg = get_reduced("qwen3-0.6b")
+    rng = np.random.default_rng(0)
+    bad = None
+    for _ in range(5000):
+        row = rng.normal(0, 4.0, cfg.vocab).astype(np.float32)
+        p32 = _float32_softmax(row)
+        if abs(float(p32.astype(np.float64).sum()) - 1.0) > 3e-7:
+            bad = row
+            break
+    assert bad is not None, "hunt failed to produce a drifted row"
+
+    # the old path trips numpy's strict float64 tolerance
+    with pytest.raises(ValueError, match="[Pp]robabilities"):
+        np.random.default_rng(0).choice(
+            bad.size, p=_float32_softmax(bad).astype(np.float64)
+        )
+
+    from repro.runtime import sampling
+
+    p = sampling.softmax(bad)
+    assert p.dtype == np.float64
+    assert abs(float(p.sum()) - 1.0) <= 1.5e-8
+    np.random.default_rng(0).choice(bad.size, p=p)  # accepted
+
+    t = sampling.host_probs(bad, temperature=0.8, top_k=50)
+    assert t.dtype == np.float64
+    np.random.default_rng(0).choice(bad.size, p=t)  # accepted
+
+    # and the engine's sampling path draws from the same row
+    model = Model.for_config(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = InferenceEngine(cfg, params, n_slots=1, max_len=32,
+                             greedy=False, sample_seed=0)
+    tok = engine._sample_token(bad)
+    assert 0 <= tok < cfg.vocab
