@@ -25,12 +25,31 @@ if git ls-files | grep -E '\.py[co]$|(^|/)__pycache__/' \
     exit 1
 fi
 
+# static lint/typecheck (repo tooling; gated so CI also runs on images
+# that bake only the runtime deps — requirements-dev.txt lists both)
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests benchmarks scripts
+else
+    echo "ruff not installed; skipping lint (pip install -r requirements-dev.txt)"
+fi
+if command -v mypy >/dev/null 2>&1; then
+    mypy --ignore-missing-imports src/repro/core src/repro/analysis
+else
+    echo "mypy not installed; skipping typecheck (pip install -r requirements-dev.txt)"
+fi
+
 python -m pytest -q
 
 # the legacy-wrapper shims must stay warning-clean at import time: only
 # USING a deprecated kwarg / loading a v1 bundle may warn, importing the
 # public modules may not
 python -W error::DeprecationWarning - <<'PY'
+import repro.analysis
+import repro.analysis.bundle_lint
+import repro.analysis.counters
+import repro.analysis.decode_lint
+import repro.analysis.lint
+import repro.analysis.soundness
 import repro.core
 import repro.core.artifact
 import repro.core.planner
@@ -45,11 +64,47 @@ import repro.runtime.residency
 print("import smoke: no DeprecationWarning on import")
 PY
 
+# python -O smoke: under -O assert statements are stripped, so every
+# checker must raise explicitly. Imports must work, and the core/validate
+# oracle + the analysis certifier must both still flag a corrupt plan.
+python -O - <<'PY'
+import repro.analysis.lint
+import repro.launch.compile
+import repro.runtime.engine
+from repro.analysis import soundness
+from repro.core import validate
+from repro.core.records import make_records
+
+recs = make_records([(0, 2, 64), (1, 3, 64)])  # overlap in time...
+offsets = {0: 0, 1: 0}                         # ...and in memory
+try:
+    validate.check_offsets(
+        recs, type("A", (), {"strategy": "x", "offsets": offsets,
+                             "total_size": 64})()
+    )
+except validate.PlanValidationError:
+    pass
+else:
+    raise SystemExit("python -O silently disabled core/validate!")
+findings = soundness.certify_offsets(recs, offsets, 64)
+assert_ok = [f for f in findings if f.code == "arena-collision"]
+if not assert_ok:
+    raise SystemExit("python -O: certifier missed the collision!")
+print("python -O smoke: checkers still raise with asserts stripped")
+PY
+
 # compile→artifact→serve round trip on a fleet sweep: compile.py --all
-# over two small archs into ONE temp manifest, then assert serve.py
-# bucket auto-selection picks the nearest compiled bucket for a max_len
-# with no exact match — with zero jaxpr traces, zero planner calls, and
-# zero cross-step state layouts (both halves ship in the v2 bundle).
+# over two small archs into ONE temp manifest (through the default-on
+# pre-publish lint gate), then:
+#   * repro.analysis.lint bundles over the manifest must come back with
+#     ZERO findings (--strict: warnings fail too) — the committed
+#     zero-findings baseline;
+#   * the compiled decode step + scan block for both archs must pass the
+#     static decode lint: donation aliased, zero host transfers;
+#   * serve.py bucket auto-selection picks the nearest compiled bucket
+#     for a max_len with no exact match — with zero jaxpr traces, zero
+#     planner calls, and zero cross-step state layouts (both halves ship
+#     in the v2 bundle).
 # State residency: the served engine's LIVE device state bytes must equal
 # the bundled StatePlan.total_size exactly (one plan-backed allocation),
 # and a REPRO_STATE_RESIDENCY=off rerun must emit identical tokens (the
@@ -57,9 +112,8 @@ PY
 python - <<'PY'
 import os
 import tempfile
-import repro.core.planner as planner
-import repro.core.unified as unified
-import repro.trace.jaxpr_liveness as tracer
+from repro.analysis import counters
+from repro.analysis.lint import main as lint_main
 from repro.launch import serve
 from repro.launch.compile import main as compile_main
 import sys
@@ -68,18 +122,25 @@ with tempfile.TemporaryDirectory() as d:
     sys.argv = ["compile", "--all", "--archs", "qwen3-0.6b", "mamba2-2.7b",
                 "--slots-list", "2", "--max-lens", "32", "64", "--out", d]
     compile_main()
-    t0, p0, s0 = tracer.TRACE_CALLS, planner.PLAN_CALLS, unified.STATE_PLAN_CALLS
-    argv = [
-        "--arch", "qwen3-0.6b", "--requests", "2", "--prompt-len", "3",
-        "--max-new", "2", "--slots", "2", "--max-len", "48",
-        "--plan-bundle", d,
-    ]
-    stats = serve.run(argv)
+    rc = lint_main(["--strict", "bundles", d])
+    assert rc == 0, f"bundle lint over the CI sweep manifest failed ({rc})"
+    rc = lint_main(["decode", "qwen3-0.6b", "mamba2-2.7b",
+                    "--slots", "2", "--max-len", "32", "--block", "4"])
+    assert rc == 0, f"compiled-decode lint failed ({rc})"
+    with counters.capture(
+        "trace_calls", "plan_calls", "state_plan_calls"
+    ) as cap:
+        argv = [
+            "--arch", "qwen3-0.6b", "--requests", "2", "--prompt-len", "3",
+            "--max-new", "2", "--slots", "2", "--max-len", "48",
+            "--plan-bundle", d,
+        ]
+        stats = serve.run(argv)
     assert stats["plan_source"] == "bundle", stats["bundle_warning"]
     assert stats["requested_max_len"] == 48 and stats["effective_max_len"] == 64, stats
-    assert tracer.TRACE_CALLS == t0, "auto-selected bundle traced a jaxpr"
-    assert planner.PLAN_CALLS == p0, "auto-selected bundle invoked the planner"
-    assert unified.STATE_PLAN_CALLS == s0, "auto-selected bundle laid out state"
+    assert cap.delta("trace_calls") == 0, "auto-selected bundle traced a jaxpr"
+    assert cap.delta("plan_calls") == 0, "auto-selected bundle invoked the planner"
+    assert cap.delta("state_plan_calls") == 0, "auto-selected bundle laid out state"
     assert stats["tokens"] == 4
     # one state allocation: live device state bytes == StatePlan.total_size
     assert stats["state_residency"] is True, stats
@@ -95,13 +156,14 @@ with tempfile.TemporaryDirectory() as d:
     assert baseline["tokens_per_request"] == stats["tokens_per_request"], (
         "residency-on tokens diverged from the XLA-allocated baseline"
     )
-print("compile --all → serve: nearest-bucket auto-selection, "
-      "zero traces/plans/state layouts, live state == planned, "
-      "residency differential clean")
+print("compile --all → lint → serve: zero-findings manifest, decode lint "
+      "clean (donation aliased, no host transfers), nearest-bucket "
+      "auto-selection with zero traces/plans/state layouts, live state == "
+      "planned, residency differential clean")
 PY
 
 # scan-block serving: --block-size K must sync with the host EXACTLY once
-# per scan block (the HOST_SYNCS counter — same discipline as the
+# per scan block (the host_syncs counter — same discipline as the
 # zero-trace/zero-plan asserts) and emit tokens byte-identical to the
 # single-wave host loop.
 python - <<'PY'

@@ -1,0 +1,32 @@
+"""Static analysis for plans, compiled decode programs, and bundles.
+
+The paper's value proposition is that intentionally aliased buffers are
+*safe*: two tensors may share bytes only when their usage intervals are
+disjoint (§3–§4). This package is the independent correctness tooling
+behind that claim — planner-independent certifiers and lints that run
+ahead of time, so every future planner or serving change is checked
+statically instead of trusted dynamically:
+
+* :mod:`~repro.analysis.soundness` — the plan soundness certifier: an
+  O(n log n) sweep-line re-derivation of liveness + arena disjointness
+  (plus StatePlan bounds/alignment/disjointness) that shares zero code
+  with ``core/interval_set`` or the planners, differential-matched
+  against the O(n²) oracle in ``core/validate``;
+* :mod:`~repro.analysis.decode_lint` — static inspection of the lowered
+  decode step / scan block: donation aliasing, host transfers, and
+  whole-state-buffer copies, ahead of time instead of via runtime
+  counters;
+* :mod:`~repro.analysis.bundle_lint` — audits a published
+  ``BundleManifest``: fingerprint coherence, stale revisions, format
+  drift, content addressing, bucket coverage gaps;
+* :mod:`~repro.analysis.counters` — one registry over the process-wide
+  instrumentation counters (TRACE_CALLS / PLAN_CALLS / STATE_PLAN_CALLS /
+  HOST_SYNCS) with a snapshot/capture API;
+* ``python -m repro.analysis.lint`` — the CLI over all three passes;
+  ``launch/compile.py`` runs the soundness + bundle passes as a
+  default-on pre-publish gate (``--no-lint`` to skip).
+"""
+
+from repro.analysis.findings import Finding, LintGateError, Report
+
+__all__ = ["Finding", "LintGateError", "Report"]

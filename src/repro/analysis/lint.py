@@ -1,0 +1,168 @@
+"""``python -m repro.analysis.lint`` — one CLI over all three passes.
+
+Subcommands::
+
+    bundles PATH             audit a manifest dir (or one bundle file):
+                             bundle_lint coherence + soundness certification
+                             of every reachable plan
+    decode ARCH [ARCH...]    lower + lint the compiled decode step and scan
+                             block for each architecture (reduced configs)
+    all --manifest PATH --archs A,B
+                             both of the above in one run
+
+Exit codes: ``0`` clean, ``1`` findings (errors; warnings too under
+``--strict``), ``2`` usage or internal failure. ``--json`` emits the
+machine-readable report on stdout instead of rendered lines.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import warnings
+from pathlib import Path
+
+from repro.analysis.findings import Report
+
+
+def _lint_bundles_path(path: Path) -> Report:
+    from repro.analysis import bundle_lint, soundness
+    from repro.core.artifact import BundleManifest, load_bundle
+
+    if path.is_dir():
+        report = bundle_lint.lint_manifest(path)
+        seen: set[str] = set()
+        try:
+            buckets = BundleManifest(path).buckets()
+        except Exception:
+            return report  # index-unreadable already reported
+        for key, entry in sorted(buckets.items()):
+            fname = entry.get("file", "")
+            if fname in seen:
+                continue
+            seen.add(fname)
+            try:
+                with warnings.catch_warnings():
+                    warnings.simplefilter("ignore", DeprecationWarning)
+                    bundle = load_bundle(path / fname)
+            except Exception:
+                continue  # unreadable: bundle_lint reported it
+            report.extend(
+                soundness.certify_bundle(bundle, label=key),
+                checked=f"soundness:{key}",
+            )
+        return report
+    report = Report()
+    report.extend(bundle_lint.lint_bundle_file(path), checked=str(path))
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            bundle = load_bundle(path)
+    except Exception:
+        return report
+    report.extend(
+        soundness.certify_bundle(bundle), checked=f"soundness:{path.name}"
+    )
+    return report
+
+
+def _lint_decode(
+    archs: list[str], *, n_slots: int, max_len: int, block: int | None,
+    greedy: bool,
+) -> Report:
+    from repro.analysis import decode_lint
+
+    report = Report()
+    for arch in archs:
+        report.merge(
+            decode_lint.lint_arch(
+                arch, n_slots=n_slots, max_len=max_len, block=block,
+                greedy=greedy,
+            )
+        )
+    return report
+
+
+def _emit(report: Report, args) -> int:
+    if args.json:
+        print(json.dumps(report.to_obj(), indent=1, sort_keys=True))
+    else:
+        print(report.render())
+    return 0 if report.ok(strict=args.strict) else 1
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="static analysis over plan bundles and compiled decode",
+    )
+    parser.add_argument(
+        "--strict", action="store_true",
+        help="fail (exit 1) on warnings, not just errors",
+    )
+    parser.add_argument(
+        "--json", action="store_true",
+        help="emit the machine-readable findings report",
+    )
+    sub = parser.add_subparsers(dest="cmd", required=True)
+
+    p_b = sub.add_parser(
+        "bundles", help="audit a manifest directory or one bundle file"
+    )
+    p_b.add_argument("path", type=Path)
+
+    def add_decode_opts(p):
+        p.add_argument("--slots", type=int, default=2)
+        p.add_argument("--max-len", type=int, default=32)
+        p.add_argument(
+            "--block", type=int, default=8,
+            help="scan-block length to lint (0 = step only)",
+        )
+        p.add_argument(
+            "--sampled", action="store_true",
+            help="lint the sampled (non-greedy) serving graph",
+        )
+
+    p_d = sub.add_parser(
+        "decode", help="lint the compiled decode step + scan block"
+    )
+    p_d.add_argument("archs", nargs="+")
+    add_decode_opts(p_d)
+
+    p_a = sub.add_parser("all", help="bundles + decode in one run")
+    p_a.add_argument("--manifest", type=Path, required=True)
+    p_a.add_argument(
+        "--archs", default="",
+        help="comma-separated architectures for the decode pass",
+    )
+    add_decode_opts(p_a)
+
+    args = parser.parse_args(argv)
+    try:
+        if args.cmd == "bundles":
+            return _emit(_lint_bundles_path(args.path), args)
+        block = None if getattr(args, "block", 0) == 0 else args.block
+        if args.cmd == "decode":
+            report = _lint_decode(
+                args.archs, n_slots=args.slots, max_len=args.max_len,
+                block=block, greedy=not args.sampled,
+            )
+            return _emit(report, args)
+        report = _lint_bundles_path(args.manifest)
+        archs = [a for a in args.archs.split(",") if a]
+        if archs:
+            report.merge(
+                _lint_decode(
+                    archs, n_slots=args.slots, max_len=args.max_len,
+                    block=block, greedy=not args.sampled,
+                )
+            )
+        return _emit(report, args)
+    except Exception as e:  # usage/internal failure, not a finding
+        print(f"lint failed: {type(e).__name__}: {e}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,8 +15,13 @@ The offline half of the compile→artifact→serve pipeline. For one
    (``core/order_search`` / ``core/fusion_search``) against the cached
    planner — and the cross-step half gets the slot/KV shared-objects
    layout with concrete offsets;
-3. validates the winning activation plan with the independent
-   first-principles checker (``core/validate.check_offsets``);
+3. gates the result through the static analyzer (default on; ``--no-lint``
+   to skip): the O(n log n) soundness certifier
+   (``repro.analysis.soundness``) re-derives liveness and proves the
+   activation arena and state layout collision-free, and the bundle
+   self-lint (``repro.analysis.bundle_lint``) checks fingerprint/shape
+   coherence — error findings refuse the publish
+   (:class:`repro.analysis.LintGateError`);
 4. publishes a versioned, fingerprinted v2
    :class:`~repro.core.artifact.PlanBundle` carrying BOTH halves into a
    content-addressed manifest directory that
@@ -68,7 +73,6 @@ from repro.core.unified import (
     plan as plan_unified,
     state_records_from_pytree,
 )
-from repro.core.validate import check_offsets
 from repro.models.api import Model
 from repro.trace.jaxpr_liveness import trace_graph
 
@@ -168,8 +172,9 @@ def compile_decode_plan(
     greedy: bool = True,
     temperature: float = 1.0,
     top_k: int = 0,
+    lint: bool = True,
 ) -> CompileResult:
-    """Trace → unified plan (both halves) → validate → bundle, in memory.
+    """Trace → unified plan (both halves) → lint gate → bundle, in memory.
 
     ``block_size``/``greedy``/``temperature``/``top_k`` are the serving
     bucket's serve-loop configuration: they join the bundle fingerprint
@@ -202,7 +207,6 @@ def compile_decode_plan(
         cache=cache,
     ))
     best_plan = unified.activation
-    check_offsets(best_plan.records, best_plan)
 
     provenance = {
         "tool": "repro.launch.compile",
@@ -229,6 +233,28 @@ def compile_decode_plan(
         fusion_groups=unified.fusion_groups,
         provenance=provenance,
     )
+    if lint:
+        # the pre-publish gate: soundness certification (sweep-line,
+        # independent of every planner) + bundle self-coherence. The O(n²)
+        # oracle twin stays in core/validate for tests; this path must
+        # scale to full-size graphs.
+        from repro.analysis import LintGateError, bundle_lint, soundness
+        from repro.analysis.findings import Report
+
+        report = Report()
+        report.extend(
+            soundness.certify_bundle(bundle), checked="soundness"
+        )
+        report.extend(
+            bundle_lint.lint_bundle(bundle, serve_params=serve_params),
+            checked="bundle_lint",
+        )
+        if not report.ok():
+            raise LintGateError(
+                report,
+                context=f"refusing to publish "
+                f"{bucket_key(cfg, n_slots=n_slots, max_len=max_len)}",
+            )
     outcome = unified.search
     return CompileResult(
         bundle=bundle,
@@ -341,6 +367,9 @@ def main() -> None:
                          "of greedy (joins the fingerprint)")
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the pre-publish static-analysis gate "
+                         "(soundness certifier + bundle self-lint)")
     ap.add_argument("--out", default=DEFAULT_BUNDLE_DIR,
                     help="bundle manifest directory")
     ap.add_argument("--json", action="store_true",
@@ -361,6 +390,7 @@ def main() -> None:
             search_iters=args.iters, fusion_rounds=args.fusion_rounds,
             block_size=args.block_size, greedy=not args.sample,
             temperature=args.temperature, top_k=args.top_k,
+            lint=not args.no_lint,
             command=command,
         )
         print(f"published {len(results)} bucket(s) to {args.out}/")
@@ -380,6 +410,7 @@ def main() -> None:
         search_iters=args.iters, fusion_rounds=args.fusion_rounds,
         block_size=args.block_size, greedy=not args.sample,
         temperature=args.temperature, top_k=args.top_k,
+        lint=not args.no_lint,
         command=command,
     )
     print(res.summary())

@@ -61,6 +61,7 @@ Two serving loops share that state:
 from __future__ import annotations
 
 import dataclasses
+import os
 import warnings
 from pathlib import Path
 from typing import Any
@@ -294,6 +295,12 @@ class InferenceEngine:
         block_size: int = 1,
         # None -> the REPRO_STATE_RESIDENCY env knob (default: on)
         state_residency: bool | None = None,
+        # certify the resolved unified plan at startup with the static
+        # analyzer (repro.analysis.soundness); None -> the
+        # REPRO_STARTUP_LINT env knob (default: off — bundles are gated
+        # at publish time, and the tracer/planner are differentially
+        # tested, so the per-process re-proof is opt-in paranoia)
+        startup_lint: bool | None = None,
         # deprecated plan-source kwargs — use session=PlanSession...
         plan_strategy: str | None = None,
         activation_graph: Graph | None = None,
@@ -466,6 +473,25 @@ class InferenceEngine:
                 )
             ),
         )
+        if (
+            startup_lint
+            if startup_lint is not None
+            else os.environ.get("REPRO_STARTUP_LINT", "").lower()
+            in ("1", "on", "true")
+        ):
+            from repro.analysis import LintGateError, soundness
+            from repro.analysis.findings import Report
+
+            report = Report().extend(
+                soundness.certify_unified(
+                    self.unified_plan, label=f"{cfg.name}-startup"
+                ),
+                checked=f"{cfg.name}-startup",
+            )
+            if not report.ok():
+                raise LintGateError(
+                    report, context="startup lint refused the unified plan"
+                )
 
         self.plan_bundle = bundle
         # allocate-once deployment: BOTH layouts come from the one unified

@@ -12,7 +12,7 @@ import jax
 import numpy as np
 import pytest
 
-import repro.runtime.engine as engine_mod
+from repro.analysis import counters
 from repro.configs.base import get_reduced
 from repro.models.api import Model
 from repro.runtime.engine import InferenceEngine
@@ -122,14 +122,14 @@ def test_host_syncs_one_per_scan_block():
     params = _params(cfg)
     prompts = _prompts(cfg)
 
-    syncs0 = engine_mod.HOST_SYNCS
-    host, _ = _run(cfg, params, prompts)
-    host_syncs = engine_mod.HOST_SYNCS - syncs0
+    with counters.capture("host_syncs") as cap:
+        host, _ = _run(cfg, params, prompts)
+    host_syncs = cap.delta("host_syncs")
     assert host_syncs == host._wave, "host loop: one sync per wave"
 
-    syncs0 = engine_mod.HOST_SYNCS
-    block, _ = _run(cfg, params, prompts, block_size=4)
-    block_syncs = engine_mod.HOST_SYNCS - syncs0
+    with counters.capture("host_syncs") as cap:
+        block, _ = _run(cfg, params, prompts, block_size=4)
+    block_syncs = cap.delta("host_syncs")
     assert block_syncs == block.n_blocks, (
         f"{block_syncs} syncs over {block.n_blocks} blocks"
     )

@@ -1,0 +1,201 @@
+"""Bundle/manifest audit (repro.analysis.bundle_lint) + the publish gate.
+
+One compiled manifest (module-scoped; three real buckets through
+``launch/compile.py``) backs every case: the pristine directory audits
+clean, each corruption — edited bundle bytes, index tamper, missing
+file, sweep hole, stale fingerprint, slot mismatch — surfaces its
+specific finding code, the CLI exit codes follow, and the pre-publish
+gate refuses to publish a failing bundle (ISSUE acceptance).
+"""
+
+import dataclasses
+import json
+import shutil
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import bundle_lint
+from repro.analysis.findings import LintGateError
+from repro.analysis.lint import main as lint_main
+
+ARCH = "qwen3-0.6b"
+
+
+@pytest.fixture(scope="module")
+def manifest_dir(tmp_path_factory):
+    """Three buckets: slots 2 × lens {16, 32} plus slots 4 × len 16 — the
+    (4, 32) cell is intentionally missing, so the full directory carries
+    exactly one coverage-gap warning and zero errors."""
+    jax = pytest.importorskip("jax")  # noqa: F841 — compile path needs jax
+    from repro.configs.base import get_reduced
+    from repro.launch.compile import compile_and_publish
+
+    d = tmp_path_factory.mktemp("bundles")
+    cfg = get_reduced(ARCH)
+    for n_slots, max_len in [(2, 16), (2, 32), (4, 16)]:
+        compile_and_publish(
+            cfg, str(d), n_slots=n_slots, max_len=max_len, measure_xla=False
+        )
+    return d
+
+
+def _copy(manifest_dir, tmp_path) -> Path:
+    dst = tmp_path / "m"
+    shutil.copytree(manifest_dir, dst)
+    return dst
+
+
+def _index(d: Path) -> dict:
+    return json.loads((d / "manifest.json").read_text())
+
+
+def _write_index(d: Path, obj: dict) -> None:
+    (d / "manifest.json").write_text(json.dumps(obj))
+
+
+def _codes(report):
+    return {f.code for f in report.findings}
+
+
+def test_pristine_manifest_has_only_the_planted_gap(manifest_dir):
+    report = bundle_lint.lint_manifest(manifest_dir)
+    assert not report.errors, [f.render() for f in report.errors]
+    assert _codes(report) == {"coverage-gap"}
+    [gap] = report.warnings
+    assert "slots4|len32" in gap.message
+    assert len(report.checked) >= 4  # 3 buckets + coverage
+
+
+def test_complete_grid_is_strict_clean(manifest_dir, tmp_path):
+    d = _copy(manifest_dir, tmp_path)
+    idx = _index(d)
+    idx["buckets"] = {
+        k: v for k, v in idx["buckets"].items() if "slots4" not in k
+    }
+    _write_index(d, idx)
+    report = bundle_lint.lint_manifest(d)
+    assert report.ok(strict=True), report.render()
+    assert lint_main(["--strict", "bundles", str(d)]) == 0
+
+
+def test_edited_bundle_file_breaks_content_address(manifest_dir, tmp_path):
+    d = _copy(manifest_dir, tmp_path)
+    key, entry = sorted(_index(d)["buckets"].items())[0]
+    path = d / entry["file"]
+    obj = json.loads(path.read_text())
+    obj["max_len"] += 1  # in-place edit: address no longer matches content
+    path.write_text(json.dumps(obj))
+    report = bundle_lint.lint_manifest(d)
+    codes = _codes(report)
+    assert "content-address-mismatch" in codes
+    # the shape edit also de-coheres the bucket and the state plan
+    assert {"bucket-key-mismatch", "state-len-mismatch"} & codes
+    assert lint_main(["bundles", str(d)]) == 1
+
+
+def test_index_fingerprint_tamper(manifest_dir, tmp_path):
+    d = _copy(manifest_dir, tmp_path)
+    idx = _index(d)
+    key = sorted(idx["buckets"])[0]
+    idx["buckets"][key]["fingerprint"] = "0" * 64
+    idx["buckets"][key]["total_size"] += 7
+    _write_index(d, idx)
+    codes = _codes(bundle_lint.lint_manifest(d))
+    assert {"index-fingerprint-mismatch", "index-total-mismatch"} <= codes
+
+
+def test_missing_bundle_file(manifest_dir, tmp_path):
+    d = _copy(manifest_dir, tmp_path)
+    entry = sorted(_index(d)["buckets"].items())[0][1]
+    (d / entry["file"]).unlink()
+    report = bundle_lint.lint_manifest(d)
+    assert "missing-file" in _codes(report)
+
+
+def test_stale_fingerprint_on_loaded_bundle(manifest_dir):
+    from repro.core.artifact import load_bundle
+
+    entry = sorted(_index(manifest_dir)["buckets"].items())[0][1]
+    bundle = load_bundle(manifest_dir / entry["file"])
+    assert bundle_lint.lint_bundle(bundle) == []
+    stale = dataclasses.replace(bundle, fingerprint="f" * 64)
+    codes = {f.code for f in bundle_lint.lint_bundle(stale)}
+    assert codes == {"fingerprint-stale"}
+
+
+def test_state_slots_mismatch(manifest_dir):
+    from repro.core.artifact import load_bundle
+
+    entry = sorted(_index(manifest_dir)["buckets"].items())[0][1]
+    bundle = load_bundle(manifest_dir / entry["file"])
+    bad_state = dataclasses.replace(
+        bundle.state_plan, n_slots=bundle.state_plan.n_slots + 1
+    )
+    mutated = dataclasses.replace(bundle, state_plan=bad_state)
+    codes = {f.code for f in bundle_lint.lint_bundle(mutated)}
+    assert "state-slots-mismatch" in codes
+
+
+def test_unknown_format_version(manifest_dir, tmp_path):
+    d = _copy(manifest_dir, tmp_path)
+    entry = sorted(_index(d)["buckets"].items())[0][1]
+    path = d / entry["file"]
+    obj = json.loads(path.read_text())
+    obj["format_version"] = 99
+    path.write_text(json.dumps(obj))
+    findings = bundle_lint.lint_bundle_file(path)
+    assert {f.code for f in findings} == {"format-unknown"}
+
+
+def test_publish_gate_refuses_failing_bundle(monkeypatch, tmp_path):
+    """compile.py must refuse to publish when the gate reports an error:
+    nothing lands in the manifest directory."""
+    pytest.importorskip("jax")
+    from repro.analysis.findings import Finding
+    from repro.configs.base import get_reduced
+    from repro.launch import compile as compile_mod
+
+    def poisoned(bundle, **kwargs):
+        return [
+            Finding(
+                pass_name="bundle_lint", code="fingerprint-stale",
+                message="injected for the gate test", where="test",
+            )
+        ]
+
+    monkeypatch.setattr(bundle_lint, "lint_bundle", poisoned)
+    out = tmp_path / "refused"
+    cfg = get_reduced(ARCH)
+    with pytest.raises(LintGateError) as exc:
+        compile_mod.compile_and_publish(
+            cfg, str(out), n_slots=2, max_len=16, measure_xla=False
+        )
+    assert "refusing to publish" in str(exc.value)
+    assert exc.value.report.errors
+    assert not out.exists() or not any(out.iterdir())
+
+    # --no-lint escape hatch: same compile publishes with the gate off
+    res = compile_mod.compile_and_publish(
+        cfg, str(out), n_slots=2, max_len=16, measure_xla=False, lint=False
+    )
+    assert (out / "manifest.json").is_file()
+    assert res.bundle.state_plan is not None
+
+
+def test_cli_json_output(manifest_dir):
+    import io
+    from contextlib import redirect_stdout
+
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        rc = lint_main(["--json", "bundles", str(manifest_dir)])
+    assert rc == 0  # the planted coverage gap is warning-severity
+    obj = json.loads(buf.getvalue())
+    assert obj["errors"] == 0
+    assert obj["warnings"] == 1
+    assert obj["findings"][0]["code"] == "coverage-gap"
+
+    # under --strict the same warning fails the run
+    with redirect_stdout(io.StringIO()):
+        assert lint_main(["--strict", "bundles", str(manifest_dir)]) == 1

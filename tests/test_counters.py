@@ -1,0 +1,47 @@
+"""The instrumentation-counter registry (repro.analysis.counters)."""
+
+from repro.analysis import counters
+
+
+def test_registry_reads_and_resets():
+    from repro.core import planner
+    from repro.core.records import make_records
+
+    counters.reset(("plan_calls",))
+    assert counters.read("plan_calls") == 0
+    planner.plan_records(
+        make_records([(0, 1, 64)]), use_cache=False, graph_name="counters-t1"
+    )
+    assert counters.read("plan_calls") == 1
+    snap = counters.snapshot(("plan_calls", "state_plan_calls"))
+    assert snap["plan_calls"] == 1
+    counters.reset(("plan_calls",))
+    assert counters.read("plan_calls") == 0
+
+
+def test_capture_deltas_without_reset():
+    from repro.core import planner
+    from repro.core.records import make_records
+
+    recs = make_records([(0, 1, 64), (1, 2, 32)])
+    planner.plan_records(recs, use_cache=False, graph_name="counters-t2")
+    before = counters.read("plan_calls")
+    with counters.capture("plan_calls", "state_plan_calls") as outer:
+        planner.plan_records(recs, use_cache=False, graph_name="counters-t3")
+        with counters.capture("plan_calls") as inner:
+            planner.plan_records(
+                recs, use_cache=False, graph_name="counters-t4"
+            )
+        assert inner.delta("plan_calls") == 1
+        assert outer.delta("plan_calls") == 2
+        assert outer.delta("state_plan_calls") == 0
+    assert outer.deltas()["plan_calls"] == 2
+    # capture never resets the underlying globals
+    assert counters.read("plan_calls") == before + 2
+
+
+def test_capture_defaults_to_full_registry():
+    with counters.capture() as cap:
+        pass
+    assert set(cap.deltas()) == set(counters.REGISTRY)
+    assert all(d == 0 for d in cap.deltas().values())

@@ -386,9 +386,7 @@ def test_bundle_served_engine_is_resident_with_zero_layout_work(tmp_path):
     """The residency buffer must come straight from the bundled StatePlan:
     zero traces, zero planner calls, zero state layouts — and live bytes
     equal to the artifact's own state total."""
-    import repro.core.planner as planner
-    import repro.core.unified as unified_mod
-    import repro.trace.jaxpr_liveness as tracer
+    from repro.analysis import counters
     from repro.core.unified import PlanSession
     from repro.launch.compile import compile_and_publish
 
@@ -396,16 +394,14 @@ def test_bundle_served_engine_is_resident_with_zero_layout_work(tmp_path):
     model = Model.for_config(cfg)
     params = model.init(jax.random.PRNGKey(0))
     compile_and_publish(cfg, tmp_path, n_slots=2, max_len=32)
-    before = (
-        tracer.TRACE_CALLS, planner.PLAN_CALLS, unified_mod.STATE_PLAN_CALLS,
-    )
-    engine = InferenceEngine(
-        cfg, params, n_slots=2, max_len=32,
-        session=PlanSession.from_manifest(tmp_path),
-    )
-    assert (
-        tracer.TRACE_CALLS, planner.PLAN_CALLS, unified_mod.STATE_PLAN_CALLS,
-    ) == before
+    with counters.capture(
+        "trace_calls", "plan_calls", "state_plan_calls"
+    ) as cap:
+        engine = InferenceEngine(
+            cfg, params, n_slots=2, max_len=32,
+            session=PlanSession.from_manifest(tmp_path),
+        )
+    assert all(d == 0 for d in cap.deltas().values()), cap.deltas()
     rep = engine.memory_report
     assert rep.plan_source == "bundle"
     assert rep.state_residency

@@ -23,9 +23,7 @@ import jax
 import numpy as np
 import pytest
 
-import repro.core.planner as planner
-import repro.core.unified as unified
-import repro.trace.jaxpr_liveness as tracer
+from repro.analysis import counters
 from repro.configs.base import get_reduced
 from repro.core import plan_io
 from repro.core.artifact import bucket_key, bundle_to_obj
@@ -40,7 +38,8 @@ N_SLOTS, MAX_LEN = 2, 48
 
 
 def _counters():
-    return tracer.TRACE_CALLS, planner.PLAN_CALLS, unified.STATE_PLAN_CALLS
+    # the no-work-at-serving-time discipline, via the analysis registry
+    return counters.snapshot(("trace_calls", "plan_calls", "state_plan_calls"))
 
 
 @pytest.fixture(scope="module")
@@ -183,15 +182,18 @@ def test_serve_compile_first(tmp_path):
 def test_engine_from_bundle_no_trace_no_plan_no_state_layout(
     cfg, params, bundle_dir
 ):
-    before = _counters()
-    engine = InferenceEngine(
-        cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
-        session=PlanSession.from_manifest(bundle_dir),
+    with counters.capture(
+        "trace_calls", "plan_calls", "state_plan_calls"
+    ) as cap:
+        engine = InferenceEngine(
+            cfg, params, n_slots=N_SLOTS, max_len=MAX_LEN,
+            session=PlanSession.from_manifest(bundle_dir),
+        )
+    assert cap.delta("trace_calls") == 0, "bundle path traced a jaxpr"
+    assert cap.delta("plan_calls") == 0, "bundle path invoked the planner"
+    assert cap.delta("state_plan_calls") == 0, (
+        "bundle path laid out the cross-step state"
     )
-    traces, plans, states = _counters()
-    assert traces == before[0], "bundle path traced a jaxpr"
-    assert plans == before[1], "bundle path invoked the planner"
-    assert states == before[2], "bundle path laid out the cross-step state"
     rep = engine.memory_report
     assert rep.plan_source == "bundle"
     assert rep.bundle_warning is None
@@ -258,7 +260,7 @@ def test_fingerprint_mismatch_falls_back_with_warning(cfg, params, bundle_dir):
     good = man.lookup(bucket_key(cfg, n_slots=N_SLOTS, max_len=MAX_LEN))
     wrong_key = bucket_key(cfg, n_slots=N_SLOTS, max_len=32)
     man.publish(wrong_key, good)
-    traces0 = tracer.TRACE_CALLS
+    traces0 = counters.read("trace_calls")
     engine = InferenceEngine(
         cfg, params, n_slots=N_SLOTS, max_len=32,
         session=PlanSession.from_manifest(bundle_dir, nearest=False),
@@ -268,7 +270,7 @@ def test_fingerprint_mismatch_falls_back_with_warning(cfg, params, bundle_dir):
     assert rep.bundle_warning is not None
     assert "fingerprint mismatch" in rep.bundle_warning
     assert "WARNING" in rep.summary()
-    assert tracer.TRACE_CALLS > traces0  # fallback really replanned
+    assert counters.read("trace_calls") > traces0  # fallback really replanned
     # and the engine still serves
     engine.submit(np.arange(3, dtype=np.int32), max_new_tokens=2)
     assert len(engine.run_until_done()) == 1
