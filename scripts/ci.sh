@@ -103,8 +103,9 @@ PY
 #     static decode lint: donation aliased, zero host transfers;
 #   * serve.py bucket auto-selection picks the nearest compiled bucket
 #     for a max_len with no exact match — with zero jaxpr traces, zero
-#     planner calls, and zero cross-step state layouts (both halves ship
-#     in the v2 bundle).
+#     planner calls, zero cross-step state layouts, and zero XLA
+#     compiles through every served token (plans AND AOT decode
+#     executables ship in the v3 bundle).
 # State residency: the served engine's LIVE device state bytes must equal
 # the bundled StatePlan.total_size exactly (one plan-backed allocation),
 # and a REPRO_STATE_RESIDENCY=off rerun must emit identical tokens (the
@@ -128,7 +129,7 @@ with tempfile.TemporaryDirectory() as d:
                     "--slots", "2", "--max-len", "32", "--block", "4"])
     assert rc == 0, f"compiled-decode lint failed ({rc})"
     with counters.capture(
-        "trace_calls", "plan_calls", "state_plan_calls"
+        "trace_calls", "plan_calls", "state_plan_calls", "compile_calls"
     ) as cap:
         argv = [
             "--arch", "qwen3-0.6b", "--requests", "2", "--prompt-len", "3",
@@ -141,6 +142,11 @@ with tempfile.TemporaryDirectory() as d:
     assert cap.delta("trace_calls") == 0, "auto-selected bundle traced a jaxpr"
     assert cap.delta("plan_calls") == 0, "auto-selected bundle invoked the planner"
     assert cap.delta("state_plan_calls") == 0, "auto-selected bundle laid out state"
+    assert stats["aot_warning"] is None, stats["aot_warning"]
+    assert stats["aot_executables"], "v3 bundle served without AOT executables"
+    assert cap.delta("compile_calls") == 0, (
+        "v3 bundle paid an XLA compile — zero-compile cold start broken"
+    )
     assert stats["tokens"] == 4
     # one state allocation: live device state bytes == StatePlan.total_size
     assert stats["state_residency"] is True, stats

@@ -17,8 +17,18 @@ re-derives what the index claims:
   or planner rev (or the config changed) and will be refused at serving
   time — recompile (error);
 * **format drift** — v1 documents still load but carry no state plan
-  and can never match a v2 engine's fingerprint (warning); unknown newer
-  versions are errors;
+  and can never match a current engine's fingerprint; v2 documents load
+  and serve but carry no AOT executables, so every cold start pays the
+  lazy decode compile (both warnings); unknown newer versions are
+  errors;
+* **executable coherence** — a v3 bundle's AOT pack must record its
+  platform + jax-version key, its entry payloads must match their
+  stored sha256/nbytes, and the entry set must be complete for the
+  bucket's serve configuration (a missing entry silently lazy-compiles
+  that one function, quietly breaking the zero-compile guarantee). All
+  jax-free; the deserialize-and-relint audit (donation aliasing
+  preserved through serialization) is
+  ``decode_lint.lint_executables``'s job at publish time;
 * **bucket coverage gaps** — within one (arch, layers, width, dtype)
   family the sweep grid should be the full cross product of its observed
   slot counts and cache lengths; holes mean some serving shapes fall
@@ -146,6 +156,51 @@ def lint_bundle(
                 where,
             )
         )
+
+    pack = bundle.executables
+    if pack is not None:
+        from repro.core.artifact import expected_executable_entries
+
+        if not pack.platform or not pack.jax_version:
+            findings.append(
+                _finding(
+                    "executable-key-missing",
+                    f"AOT pack records platform={pack.platform!r} "
+                    f"jax_version={pack.jax_version!r} — without both "
+                    f"keys a serving process cannot refuse a stale or "
+                    f"cross-platform executable",
+                    where,
+                )
+            )
+        block = int((serve_params or {}).get("block_size", 1))
+        missing = sorted(
+            set(expected_executable_entries(block)) - set(pack.entries)
+        )
+        if missing:
+            findings.append(
+                _finding(
+                    "executable-missing",
+                    f"AOT pack is incomplete for this bucket's serve "
+                    f"configuration: missing {missing} — those functions "
+                    f"would silently lazy-compile at serving time; "
+                    f"recompile",
+                    where,
+                )
+            )
+        for name, entry in sorted(pack.entries.items()):
+            if (
+                hashlib.sha256(entry.payload).hexdigest() != entry.sha256
+                or entry.nbytes != len(entry.payload)
+            ):
+                findings.append(
+                    _finding(
+                        "executable-corrupt",
+                        f"AOT executable {name!r} payload does not match "
+                        f"its stored sha256/nbytes — corrupted or edited "
+                        f"in place",
+                        where,
+                    )
+                )
     return findings
 
 
@@ -176,7 +231,18 @@ def lint_bundle_file(path: str | Path, *, label: str = "") -> list[Finding]:
             _finding(
                 "format-drift",
                 "format v1 document (activation half only) — cannot match "
-                "a v2 engine's fingerprint; recompile",
+                "a current engine's fingerprint; recompile",
+                where,
+                severity="warning",
+            )
+        ]
+    elif version == 2:
+        findings = [
+            _finding(
+                "format-drift",
+                "format v2 document (no AOT executables) — still serves, "
+                "but every cold start pays the lazy decode compile; "
+                "recompile for zero-compile cold start",
                 where,
                 severity="warning",
             )

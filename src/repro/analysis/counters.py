@@ -2,7 +2,8 @@
 
 The repo instruments its hot paths with module-global counters
 (``tracer.TRACE_CALLS``, ``planner.PLAN_CALLS``,
-``unified.STATE_PLAN_CALLS``, ``engine.HOST_SYNCS``) that tests, CI and
+``unified.STATE_PLAN_CALLS``, ``engine.HOST_SYNCS``,
+``residency.COMPILE_CALLS``) that tests, CI and
 benches snapshot/delta to pin caching and sync behaviour. Before this
 module each call site hand-rolled the same
 ``t0, p0, s0 = tracer.TRACE_CALLS, planner.PLAN_CALLS, ...`` boilerplate;
@@ -31,6 +32,7 @@ REGISTRY: dict[str, tuple[str, str]] = {
     "plan_calls": ("repro.core.planner", "PLAN_CALLS"),
     "state_plan_calls": ("repro.core.unified", "STATE_PLAN_CALLS"),
     "host_syncs": ("repro.runtime.engine", "HOST_SYNCS"),
+    "compile_calls": ("repro.runtime.residency", "COMPILE_CALLS"),
 }
 
 

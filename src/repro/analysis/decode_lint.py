@@ -23,10 +23,15 @@ them ahead of time from the compiled executable's HLO text:
   wrong length (error).
 
 Programs are lowered shape-level (``jax.eval_shape`` for params; no
-weights are materialized) through the *same* impl functions the serving
-backend jits — ``StateResidency.unpack``/``pack`` around
-``model.decode_step`` and ``_block_wave`` — so the lint inspects the
-real decode program, not a stand-in.
+weights are materialized) through the *same* impl factories the serving
+backend jits (``runtime/residency.resident_decode_impl`` & co.), so the
+lint inspects the real decode program, not a stand-in.
+
+:func:`lint_executables` applies the same checks to a v3 bundle's
+AOT-serialized executables *after* deserialization — proving the
+donation aliasing (and the absence of host transfers) survived the
+serialize→bundle→deserialize round trip, which is the publish gate's
+last step before a pack ships.
 """
 
 from __future__ import annotations
@@ -276,7 +281,13 @@ def lower_decode_programs(
     from repro.configs.base import get_reduced
     from repro.core.unified import plan_state, state_records_from_pytree
     from repro.models.api import Model
-    from repro.runtime.residency import StateResidency, _block_wave
+    from repro.runtime.residency import (
+        BLOCK_DONATE,
+        DECODE_DONATE,
+        StateResidency,
+        resident_block_impl,
+        resident_decode_impl,
+    )
     from repro.runtime.sampling import SamplingParams, TokenSampler
 
     cfg = get_reduced(arch)
@@ -297,17 +308,13 @@ def lower_decode_programs(
     keys_aval = jax.ShapeDtypeStruct((n_slots, 2), jnp.uint32)
     eos_aval = jax.ShapeDtypeStruct((), jnp.int32)
 
-    def step(params, tokens, buf, pos, active):
-        unpacked = resid.unpack(buf)
-        logits, new_caches = model.decode_step(
-            params, tokens, unpacked, pos, active=active
-        )
-        return logits, resid.pack(new_caches, buf)
-
     programs = [
         DecodeProgram(
             label=f"{arch}:step",
-            hlo=jax.jit(step, donate_argnums=(2,))
+            hlo=jax.jit(
+                resident_decode_impl(model, resid),
+                donate_argnums=DECODE_DONATE,
+            )
             .lower(params_aval, tok_aval, buf_aval, vec_i32, vec_bool)
             .compile()
             .as_text(),
@@ -319,28 +326,13 @@ def lower_decode_programs(
         sampler = TokenSampler(
             SamplingParams(greedy=greedy), max_len=max_len
         )
-
-        def impl(params, buf, tokens, pos, active, done, budget, keys, eos):
-            def body(carry, _):
-                buf, tokens, pos, done, budget, keys = carry
-                unpacked = resid.unpack(buf)
-                new_caches, (tokens, pos, done, budget, keys), out = (
-                    _block_wave(model, sampler, params, unpacked, tokens,
-                                pos, active, done, budget, keys, eos)
-                )
-                buf = resid.pack(new_caches, buf)
-                return (buf, tokens, pos, done, budget, keys), out
-
-            carry, (toks, emitted) = jax.lax.scan(
-                body, (buf, tokens, pos, done, budget, keys), None,
-                length=block,
-            )
-            return carry, toks, emitted
-
         programs.append(
             DecodeProgram(
                 label=f"{arch}:block{block}",
-                hlo=jax.jit(impl, donate_argnums=(1,))
+                hlo=jax.jit(
+                    resident_block_impl(model, resid, sampler, block),
+                    donate_argnums=BLOCK_DONATE,
+                )
                 .lower(params_aval, buf_aval, tok_aval, vec_i32, vec_bool,
                        vec_bool, vec_i32, keys_aval, eos_aval)
                 .compile()
@@ -350,6 +342,58 @@ def lower_decode_programs(
             )
         )
     return programs
+
+
+_BLOCK_ENTRY_RE = re.compile(r"resident_block_(\d+)")
+
+
+def lint_executables(bundle) -> list[Finding]:
+    """Audit a v3 bundle's AOT executables AFTER deserialization: every
+    entry must load, and the residency-backend entries must still carry
+    the state-buffer donation aliasing (plus the host-transfer and scan
+    checks of :func:`lint_program`) — proving serialization preserved
+    the properties the publish gate certified on the live ``Compiled``.
+    Presence/key-coherence checks that need no jax live in
+    ``bundle_lint``; this pass loads executables, so it runs only where
+    the pack's platform matches (the compile gate, same-platform
+    audits)."""
+    pack = getattr(bundle, "executables", None)
+    if pack is None:
+        return []
+    from repro.runtime.aot import deserialize_compiled
+
+    findings: list[Finding] = []
+    state_nbytes = (
+        bundle.state_plan.total_size if bundle.state_plan is not None else 0
+    )
+    for name, entry in sorted(pack.entries.items()):
+        label = f"{bundle.arch}:{name}"
+        try:
+            hlo = deserialize_compiled(entry.payload).as_text()
+        except Exception as e:
+            findings.append(
+                _finding(
+                    "executable-load-failed",
+                    f"AOT executable failed to deserialize on its own "
+                    f"platform ({type(e).__name__}: {e})",
+                    label,
+                )
+            )
+            continue
+        if not name.startswith("resident_"):
+            continue  # pytree entries have no donated state buffer
+        m = _BLOCK_ENTRY_RE.fullmatch(name)
+        findings.extend(
+            lint_program(
+                DecodeProgram(
+                    label=label,
+                    hlo=hlo,
+                    state_nbytes=state_nbytes,
+                    expect_trip=int(m.group(1)) if m else None,
+                )
+            )
+        )
+    return findings
 
 
 def lint_arch(
@@ -372,6 +416,7 @@ def lint_arch(
 __all__ = [
     "DecodeProgram",
     "lint_arch",
+    "lint_executables",
     "lint_program",
     "lower_decode_programs",
     "parse_alias_table",

@@ -21,7 +21,14 @@ running a planning strategy:
   cache length, pipeline revision) that a serving engine verifies without
   tracing anything, and a **structural** one (:func:`graph_fingerprint` —
   hash of the traced op/tensor graph) that the compile step records and
-  the fallback path can check after a fresh trace.
+  the fallback path can check after a fresh trace;
+* **format v3**: an :class:`ExecutablePack` of AOT-serialized decode
+  executables (the exact step / reset / scan-block functions the state
+  backends jit), keyed by the bundle fingerprint plus a platform +
+  jax-version pair, so a swept fleet node goes process-start→first-token
+  with **zero XLA compiles**. A stale or cross-platform pack is refused
+  with a one-line warning and the engine degrades to lazy compile —
+  never a crash (see ``runtime/aot.py``).
 
 Bundles are stored content-addressed under a directory managed by
 :class:`BundleManifest`: the bundle file is named by the sha256 of its
@@ -40,6 +47,7 @@ rebuilt from the ``bundle-*.json`` files on disk.
 
 from __future__ import annotations
 
+import base64
 import contextlib
 import dataclasses
 import hashlib
@@ -67,7 +75,17 @@ if TYPE_CHECKING:  # keep this module importable without jax
 # v2: + state_plan (cross-step slot/KV layout), + n_layers/d_model (the
 # bucket-key shape fields, so a manifest index can be rebuilt from bundle
 # files alone)
-BUNDLE_FORMAT_VERSION = 2
+# v3: + executables (AOT-serialized decode step/reset/block, platform +
+# jax-version keyed — zero XLA compiles on the serving path)
+BUNDLE_FORMAT_VERSION = 3
+
+# What ``decode_fingerprint`` hashes is versioned SEPARATELY from the
+# bundle container: the v2->v3 rev only ADDS the executable payload (the
+# graph-shaping inputs are untouched), so v2 bundles must keep
+# fingerprint-matching a v3 engine and degrade to lazy compile — not fall
+# all the way back to plan-at-construction. Bump this only when the
+# fingerprint *payload itself* changes meaning.
+FINGERPRINT_SCHEMA_VERSION = 2
 
 # The manifest index schema is versioned separately: v1 manifest dirs
 # remain readable across the bundle v1->v2 rev (their per-bucket entries
@@ -141,7 +159,7 @@ def decode_fingerprint(
     cfg_obj = dataclasses.asdict(cfg)
     cfg_obj.pop("source", None)
     payload = {
-        "format_version": BUNDLE_FORMAT_VERSION,
+        "format_version": FINGERPRINT_SCHEMA_VERSION,
         "pipeline_revision": PIPELINE_REVISION,
         "planner_revision": plan_io.PLANNER_REVISION,
         "config": cfg_obj,
@@ -212,6 +230,103 @@ def bundle_bucket_key(bundle: PlanBundle) -> str | None:
     )
 
 
+# ------------------------------------------------------------- executables
+
+
+def _payload_sha(payload: bytes) -> str:
+    return hashlib.sha256(payload).hexdigest()
+
+
+@dataclasses.dataclass
+class ExecutableEntry:
+    """One AOT-serialized compiled function (opaque bytes — produced and
+    consumed only by ``runtime/aot.py``; this module never unpickles)."""
+
+    payload: bytes
+    sha256: str  # of payload — integrity check before deserialization
+    nbytes: int  # == len(payload); surfaced in docs/lint size reporting
+
+
+def executable_entry(payload: bytes) -> ExecutableEntry:
+    return ExecutableEntry(
+        payload=payload, sha256=_payload_sha(payload), nbytes=len(payload)
+    )
+
+
+@dataclasses.dataclass
+class ExecutablePack:
+    """The v3 bundle's AOT half: serialized executables for every decode
+    function a state backend would otherwise jit, keyed by the platform
+    and jax version they were compiled under. A pack whose platform or
+    jax_version does not match the serving process is *refused* (one-line
+    warning, lazy-compile fallback) — serialized XLA executables are not
+    portable across backends or jax releases."""
+
+    platform: str  # jax.default_backend() at compile time
+    jax_version: str
+    entries: dict[str, ExecutableEntry]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(e.nbytes for e in self.entries.values())
+
+
+def executables_to_obj(pack: ExecutablePack) -> dict:
+    return {
+        "platform": pack.platform,
+        "jax_version": pack.jax_version,
+        "entries": {
+            name: {
+                "payload_b64": base64.b64encode(entry.payload).decode(
+                    "ascii"
+                ),
+                "sha256": entry.sha256,
+                "nbytes": entry.nbytes,
+            }
+            for name, entry in sorted(pack.entries.items())
+        },
+    }
+
+
+def block_entry_name(backend: str, length: int) -> str:
+    """Pack entry name for a scan-block executable
+    (``resident_block_4``, ``pytree_block_4``, ...)."""
+    return f"{backend}_block_{int(length)}"
+
+
+def expected_executable_entries(block_size: int = 1) -> list[str]:
+    """The entry names a complete pack carries for one serving bucket:
+    decode + reset for BOTH state backends (residency is a serving-time
+    knob the compile step cannot predict), plus the full-size scan block
+    on block-mode buckets (tail blocks have engine-chosen shorter
+    lengths and lazy-compile)."""
+    names = [
+        "pytree_decode",
+        "pytree_reset",
+        "resident_decode",
+        "resident_reset",
+    ]
+    if block_size > 1:
+        names.append(block_entry_name("resident", block_size))
+        names.append(block_entry_name("pytree", block_size))
+    return sorted(names)
+
+
+def executables_from_obj(obj: dict) -> ExecutablePack:
+    entries = {}
+    for name, e in obj.get("entries", {}).items():
+        entries[name] = ExecutableEntry(
+            payload=base64.b64decode(e["payload_b64"]),
+            sha256=e["sha256"],
+            nbytes=e["nbytes"],
+        )
+    return ExecutablePack(
+        platform=obj["platform"],
+        jax_version=obj["jax_version"],
+        entries=entries,
+    )
+
+
 # ----------------------------------------------------------------- bundles
 
 
@@ -246,6 +361,9 @@ class PlanBundle:
     # "unknown" (v1-shim bundles, hand-built test bundles)
     n_layers: int = 0
     d_model: int = 0
+    # v3: AOT-serialized decode executables — None in v1/v2-shim bundles
+    # and under ``compile.py --no-aot`` (the engine lazy-compiles)
+    executables: ExecutablePack | None = None
 
     @property
     def total_size(self) -> int:
@@ -269,10 +387,17 @@ class PlanBundle:
                 f" + state {self.state_plan.total_size / 2**20:.3f} MiB "
                 f"= {self.total_size / 2**20:.3f} MiB unified"
             )
+        aot = ""
+        if self.executables is not None:
+            aot = (
+                f" + {len(self.executables.entries)} AOT executable(s) "
+                f"({self.executables.nbytes / 2**20:.3f} MiB, "
+                f"{self.executables.platform})"
+            )
         return (
             f"bundle {self.arch} slots={self.n_slots} len={self.max_len} "
             f"{self.dtype}: {self.plan.total_size / 2**20:.3f} MiB "
-            f"[{self.plan.strategy}]{extra}{state}"
+            f"[{self.plan.strategy}]{extra}{state}{aot}"
         )
 
 
@@ -311,6 +436,11 @@ def bundle_to_obj(bundle: PlanBundle) -> dict:
         "order": bundle.order,
         "fusion_groups": bundle.fusion_groups,
         "provenance": bundle.provenance,
+        "executables": (
+            executables_to_obj(bundle.executables)
+            if bundle.executables is not None
+            else None
+        ),
     }
 
 
@@ -322,13 +452,26 @@ def bundle_from_obj(obj: dict) -> PlanBundle:
     version = obj.get("format_version")
     if version == 1:
         # v1 shim: no state plan, no bucket shape fields. The bundle
-        # loads, but its fingerprint hashed format v1 — a v2 engine's
-        # expectation never matches, so fallback semantics are preserved
-        # (plan-at-construction with a one-line warning).
+        # loads, but its fingerprint hashed fingerprint-schema v1 — a
+        # current engine's expectation never matches, so fallback
+        # semantics are preserved (plan-at-construction, one-line
+        # warning).
         warnings.warn(
             "loading plan-bundle format v1 (activation half only); "
-            "recompile with launch/compile.py for a v2 bundle carrying "
-            "the cross-step state plan",
+            "recompile with launch/compile.py for a v3 bundle carrying "
+            "the cross-step state plan and AOT decode executables",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+    elif version == 2:
+        # v2 shim: both plan halves but no AOT executables. The
+        # fingerprint schema is unchanged across v2->v3, so the bundle
+        # still matches its bucket and serves — the engine merely
+        # degrades to lazy-compiling the decode jits.
+        warnings.warn(
+            "loading plan-bundle format v2 (no AOT decode executables); "
+            "recompile with launch/compile.py for a v3 bundle that "
+            "serves with zero XLA compiles",
             DeprecationWarning,
             stacklevel=2,
         )
@@ -338,6 +481,7 @@ def bundle_from_obj(obj: dict) -> PlanBundle:
             f"(this build reads versions 1-{BUNDLE_FORMAT_VERSION})"
         )
     state_obj = obj.get("state_plan")
+    exec_obj = obj.get("executables")
     return PlanBundle(
         fingerprint=obj["fingerprint"],
         graph_fingerprint=obj["graph_fingerprint"],
@@ -352,6 +496,7 @@ def bundle_from_obj(obj: dict) -> PlanBundle:
         state_plan=state_plan_from_obj(state_obj) if state_obj else None,
         n_layers=obj.get("n_layers", 0),
         d_model=obj.get("d_model", 0),
+        executables=executables_from_obj(exec_obj) if exec_obj else None,
     )
 
 
@@ -422,9 +567,12 @@ class BundleManifest:
 
     def __init__(self, directory: str | Path):
         self.dir = Path(directory)
-        # memo for pre-`unified_total` index entries: legacy bundles are
-        # loaded at most once per manifest handle during auto-selection
+        # memo for pre-`unified_total` index entries whose bundles could
+        # not be read during the one-shot index upgrade below
         self._legacy_totals: dict[str, int] = {}
+        # the upgrade runs at most once per handle even when it cannot
+        # persist (read-only manifest dir)
+        self._upgraded = False
 
     @property
     def manifest_path(self) -> Path:
@@ -570,8 +718,9 @@ class BundleManifest:
 
     def _unified_total(self, key: str, entry: dict) -> int:
         """The bucket's unified footprint (activation + state) for the
-        admission tie-break. Indexed since this revision; older manifest
-        entries fall back to loading the bundle, memoized per handle."""
+        admission tie-break. Indexed since the v2 manifest revision;
+        entries still missing it after :meth:`_upgrade_legacy_index`
+        (unreadable bundles) rank last via the per-handle memo."""
         if isinstance(entry.get("unified_total"), int):
             return entry["unified_total"]
         fname = entry.get("file")
@@ -585,6 +734,45 @@ class BundleManifest:
             total = self._UNRANKABLE
         self._legacy_totals[fname] = total
         return total
+
+    def _upgrade_legacy_index(self) -> dict:
+        """One-shot upgrade of a pre-``unified_total`` index: load each
+        legacy bundle ONCE, stamp its unified footprint into the entry,
+        and persist the index — so bucket auto-selection stops re-reading
+        every bundle file on every :meth:`lookup_nearest`. Best-effort on
+        a read-only manifest dir: the computed totals are then served
+        from the per-handle memo instead. Returns the (possibly upgraded)
+        index."""
+        with _locked(self.dir / ".manifest.lock"):
+            index = self._read_index(locked=True)
+            changed = False
+            for entry in index["buckets"].values():
+                if isinstance(entry.get("unified_total"), int):
+                    continue
+                fname = entry.get("file", "")
+                try:
+                    with warnings.catch_warnings():
+                        warnings.simplefilter("ignore", DeprecationWarning)
+                        total = load_bundle(self.dir / fname).total_size
+                except Exception:
+                    # unreadable: memoize the loss, keep the entry legacy
+                    # so a later repair is picked up
+                    self._legacy_totals[fname] = self._UNRANKABLE
+                    continue
+                entry["unified_total"] = total
+                self._legacy_totals[fname] = total
+                changed = True
+            if changed:
+                tmp = self.manifest_path.with_suffix(f".tmp{os.getpid()}")
+                try:
+                    tmp.write_text(
+                        json.dumps(index, sort_keys=True, indent=1)
+                    )
+                    tmp.replace(self.manifest_path)
+                except OSError:
+                    pass  # read-only dir: totals live in the memo
+        self._upgraded = True
+        return index
 
     def lookup_nearest(
         self, cfg: "ArchConfig", *, n_slots: int, max_len: int
@@ -602,6 +790,11 @@ class BundleManifest:
         buckets = self.buckets()
         if exact in buckets:
             return exact, load_bundle(self.dir / buckets[exact]["file"])
+        if not self._upgraded and any(
+            not isinstance(e.get("unified_total"), int)
+            for e in buckets.values()
+        ):
+            buckets = self._upgrade_legacy_index()["buckets"]
         want = parse_bucket_key(exact)
         best: tuple[tuple[int, int, int], str] | None = None
         for key, entry in buckets.items():

@@ -22,12 +22,22 @@ The offline half of the compile→artifact→serve pipeline. For one
    self-lint (``repro.analysis.bundle_lint``) checks fingerprint/shape
    coherence — error findings refuse the publish
    (:class:`repro.analysis.LintGateError`);
-4. publishes a versioned, fingerprinted v2
-   :class:`~repro.core.artifact.PlanBundle` carrying BOTH halves into a
-   content-addressed manifest directory that
+4. AOT-compiles the bucket's decode executables (decode step, slot
+   reset, scan block — the exact functions the state backends jit,
+   ``runtime/aot.py``) and serializes them into the bundle, so a served
+   node performs **zero XLA compiles** on top of the zero traces / zero
+   planner calls. Runs *behind* the lint gate (an unsound plan is
+   refused before the expensive compiles), and the resulting executables
+   are themselves audited (donation aliasing preserved through
+   serialization, ``analysis/decode_lint.lint_executables``) before
+   publish. ``--no-aot`` skips this step (smaller bundles, lazy-compile
+   serving);
+5. publishes a versioned, fingerprinted v3
+   :class:`~repro.core.artifact.PlanBundle` carrying all of the above
+   into a content-addressed manifest directory that
    ``InferenceEngine(session=PlanSession.from_manifest(dir))`` /
-   ``launch/serve.py --plan-bundle`` serve from without tracing, planning,
-   or laying anything out.
+   ``launch/serve.py --plan-bundle`` serve from without tracing,
+   planning, laying anything out, or compiling anything.
 
 ``--all`` sweeps a whole fleet's bucket grid — every selected arch ×
 ``--slots-list`` × ``--max-lens`` (× ``--dtypes``) — into one manifest,
@@ -173,8 +183,10 @@ def compile_decode_plan(
     temperature: float = 1.0,
     top_k: int = 0,
     lint: bool = True,
+    aot: bool = True,
 ) -> CompileResult:
-    """Trace → unified plan (both halves) → lint gate → bundle, in memory.
+    """Trace → unified plan (both halves) → lint gate → AOT executables
+    → bundle, in memory.
 
     ``block_size``/``greedy``/``temperature``/``top_k`` are the serving
     bucket's serve-loop configuration: they join the bundle fingerprint
@@ -211,9 +223,11 @@ def compile_decode_plan(
     provenance = {
         "tool": "repro.launch.compile",
         **unified.provenance,
+        # with AOT on, the measurement comes free from the pytree-decode
+        # executable compile below (no separate throwaway compile)
         "xla_temp_bytes": (
             _measure_xla_temp(cfg, n_slots=n_slots, max_len=max_len)
-            if measure_xla else None
+            if measure_xla and not aot else None
         ),
     }
     if serve_params:
@@ -255,6 +269,41 @@ def compile_decode_plan(
                 context=f"refusing to publish "
                 f"{bucket_key(cfg, n_slots=n_slots, max_len=max_len)}",
             )
+    if aot:
+        # behind the lint gate on purpose: an unsound plan is refused
+        # before the expensive XLA compiles. Each executable is the
+        # residency impl the serving backend would jit, serialized for
+        # zero-compile cold start (runtime/aot.py).
+        from repro.runtime.aot import build_decode_executables
+
+        pack, aot_xla_temp = build_decode_executables(
+            cfg, unified.state,
+            n_slots=n_slots, max_len=max_len,
+            block_size=block_size, greedy=greedy,
+            temperature=temperature, top_k=top_k,
+        )
+        if measure_xla and aot_xla_temp is not None:
+            provenance = {**provenance, "xla_temp_bytes": aot_xla_temp}
+        bundle = dataclasses.replace(
+            bundle, executables=pack, provenance=provenance
+        )
+        if lint:
+            # post-serialization audit: the executables must still carry
+            # the donation aliasing (and stay free of host transfers) —
+            # a serialization path that drops either is refused here
+            from repro.analysis import LintGateError, decode_lint
+            from repro.analysis.findings import Report
+
+            report = Report().extend(
+                decode_lint.lint_executables(bundle),
+                checked="decode_lint:executables",
+            )
+            if not report.ok():
+                raise LintGateError(
+                    report,
+                    context=f"refusing to publish AOT executables for "
+                    f"{bucket_key(cfg, n_slots=n_slots, max_len=max_len)}",
+                )
     outcome = unified.search
     return CompileResult(
         bundle=bundle,
@@ -370,6 +419,10 @@ def main() -> None:
     ap.add_argument("--no-lint", action="store_true",
                     help="skip the pre-publish static-analysis gate "
                          "(soundness certifier + bundle self-lint)")
+    ap.add_argument("--no-aot", action="store_true",
+                    help="skip AOT-compiling + serializing the decode "
+                         "executables (smaller bundles; served engines "
+                         "lazy-compile at the first wave)")
     ap.add_argument("--out", default=DEFAULT_BUNDLE_DIR,
                     help="bundle manifest directory")
     ap.add_argument("--json", action="store_true",
@@ -390,7 +443,7 @@ def main() -> None:
             search_iters=args.iters, fusion_rounds=args.fusion_rounds,
             block_size=args.block_size, greedy=not args.sample,
             temperature=args.temperature, top_k=args.top_k,
-            lint=not args.no_lint,
+            lint=not args.no_lint, aot=not args.no_aot,
             command=command,
         )
         print(f"published {len(results)} bucket(s) to {args.out}/")
@@ -410,7 +463,7 @@ def main() -> None:
         search_iters=args.iters, fusion_rounds=args.fusion_rounds,
         block_size=args.block_size, greedy=not args.sample,
         temperature=args.temperature, top_k=args.top_k,
-        lint=not args.no_lint,
+        lint=not args.no_lint, aot=not args.no_aot,
         command=command,
     )
     print(res.summary())

@@ -93,6 +93,7 @@ from repro.runtime.residency import (
     PytreeState,
     ResidentState,
     StateResidency,
+    count_compile,
     residency_enabled,
 )
 from repro.runtime.sampling import SamplingParams, TokenSampler, host_probs
@@ -168,6 +169,11 @@ class MemoryReport:
     # leaf bytes are reported here instead
     state_residency: bool = False
     state_live_bytes: int | None = None
+    # v3 zero-compile serving: the AOT executable entries deserialized
+    # from the bundle (empty = lazy compile), and the one-line reason
+    # when a shipped pack was refused (platform/jax-version/integrity)
+    aot_executables: list[str] = dataclasses.field(default_factory=list)
+    aot_warning: str | None = None
 
     @property
     def state_planned_bytes(self) -> int | None:
@@ -196,6 +202,13 @@ class MemoryReport:
                 f"XLA temp allocation for the same step: "
                 f"{self.xla_temp_bytes / 2**20:.3f} MiB"
             )
+        if self.aot_executables:
+            lines.append(
+                f"AOT decode executables: {len(self.aot_executables)} "
+                f"loaded from the bundle (zero-compile serving)"
+            )
+        elif self.aot_warning:
+            lines.append(f"WARNING: {self.aot_warning}")
         if self.state_plan is not None:
             lines.append(self.state_plan.summary())
             lines.append(
@@ -444,6 +457,7 @@ class InferenceEngine:
                     .lower(params, tok0, cache_template, pos0, act0)
                     .compile()
                 )
+                count_compile()
                 ma = compiled.memory_analysis()
                 xla_temp = int(getattr(ma, "temp_size_in_bytes", 0)) or None
             except Exception:
@@ -494,6 +508,20 @@ class InferenceEngine:
                 )
 
         self.plan_bundle = bundle
+        # v3 zero-compile path: deserialize the bundle's AOT executables
+        # (when shipped) for the state backend below — decode/reset/scan
+        # block then dispatch without a single XLA compile. A refused
+        # pack (wrong platform, different jax version, integrity failure)
+        # warns ONE line and serves through the counted lazy jits — the
+        # same degradation a v2 bundle gets.
+        aot_execs: dict[str, Any] = {}
+        aot_warning: str | None = None
+        if bundle is not None and bundle.executables is not None:
+            from repro.runtime.aot import load_executables
+
+            aot_execs, aot_warning = load_executables(bundle)
+            if aot_warning:
+                warnings.warn(aot_warning, RuntimeWarning, stacklevel=2)
         # allocate-once deployment: BOTH layouts come from the one unified
         # plan; the activation arena is materialized (the decode step's
         # scratch bytes) and — with residency on — so is the cross-step
@@ -514,7 +542,9 @@ class InferenceEngine:
                 # contract is all-zero state): on this path the engine
                 # NEVER materializes a cache pytree, so cold start holds
                 # exactly one state allocation, not pytree + arena
-                self.state = ResidentState(self.model, self.residency)
+                self.state = ResidentState(
+                    self.model, self.residency, executables=aot_execs
+                )
             except Exception as e:
                 # a state plan that cannot back this cache pytree must
                 # degrade to the XLA-allocated path, not kill serving
@@ -525,7 +555,9 @@ class InferenceEngine:
                 self.residency = None
         if self.residency is None:
             self.state = PytreeState(
-                self.model, self.model.init_cache(n_slots, self.max_len)
+                self.model,
+                self.model.init_cache(n_slots, self.max_len),
+                executables=aot_execs,
             )
         self.memory_report = MemoryReport(
             activation_plan=plan,
@@ -538,6 +570,8 @@ class InferenceEngine:
             state_plan=state_plan,
             state_residency=self.state.residency,
             state_live_bytes=self.state.live_bytes,
+            aot_executables=sorted(aot_execs),
+            aot_warning=aot_warning,
         )
 
         # serving state — per-slot positions (continuous batching: every

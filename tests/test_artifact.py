@@ -3,14 +3,17 @@
 The artifact layer is the contract between the offline compiler and every
 future serving process, so these tests pin the properties serving relies
 on: byte-determinism (content addressing must be stable across
-recompiles), version gating (v1 loads through a one-warning shim, newer
-versions are rejected), fingerprint sensitivity (any graph-shaping change
-re-keys), manifest dedup, corrupt-index quarantine + rebuild, bucket
-auto-selection (``lookup_nearest``), and lost-update safety of concurrent
-``publish()``.
+recompiles), version gating (v1 and v2 load through one-warning shims,
+newer versions are rejected), the v3 AOT-executable payload (content
+addressing, base64 round trip, expected-entry naming), fingerprint
+sensitivity (any graph-shaping change re-keys), manifest dedup,
+corrupt-index quarantine + rebuild, bucket auto-selection
+(``lookup_nearest``) including the one-shot legacy-index upgrade, and
+lost-update safety of concurrent ``publish()``.
 """
 
 import dataclasses
+import hashlib
 import json
 import multiprocessing
 import warnings
@@ -22,8 +25,12 @@ from repro.configs.base import get_reduced
 from repro.core.artifact import (
     BUNDLE_FORMAT_VERSION,
     BundleManifest,
+    ExecutablePack,
     PlanBundle,
+    block_entry_name,
     bucket_key,
+    executable_entry,
+    expected_executable_entries,
     bundle_bucket_key,
     bundle_from_json,
     bundle_from_obj,
@@ -130,6 +137,62 @@ def test_bundle_v2_round_trips_unified_plan():
     assert up.total_size == b.plan.total_size + b.state_plan.total_size
     assert up.total_size == b.total_size
     assert "unified" in b.summary()
+
+
+def _pack() -> ExecutablePack:
+    return ExecutablePack(
+        platform="cpu",
+        jax_version="0.0.test",
+        entries={
+            n: executable_entry(f"payload-{n}".encode())
+            for n in expected_executable_entries()
+        },
+    )
+
+
+def test_bundle_v3_round_trips_executables():
+    """A v3 bundle round-trips its AOT executable pack byte-
+    deterministically, with per-entry content addressing intact."""
+    b = _bundle(executables=_pack())
+    text = bundle_to_json(b)
+    b2 = bundle_from_json(text)
+    assert bundle_to_json(b2) == text
+    pack = b2.executables
+    assert pack.platform == "cpu" and pack.jax_version == "0.0.test"
+    assert sorted(pack.entries) == expected_executable_entries()
+    entry = pack.entries["resident_decode"]
+    assert entry.payload == b"payload-resident_decode"
+    assert entry.nbytes == len(entry.payload)
+    assert entry.sha256 == hashlib.sha256(entry.payload).hexdigest()
+    assert pack.nbytes == sum(e.nbytes for e in pack.entries.values())
+    assert "AOT executable" in b.summary()
+
+
+def test_bundle_v2_loads_through_shim_with_warning():
+    """v2 documents (plans but no executables) still load — one
+    DeprecationWarning, ``executables=None`` — and keep BOTH plan halves,
+    so a v3 engine serves them with lazy compile only (the fingerprint
+    schema rolled separately; exercised end-to-end in test_aot)."""
+    obj = bundle_to_obj(_bundle(executables=_pack()))
+    obj["format_version"] = 2
+    obj.pop("executables", None)
+    with pytest.deprecated_call(match="format v2"):
+        b = bundle_from_obj(json.loads(json.dumps(obj)))
+    assert b.executables is None
+    assert b.state_plan is not None
+    assert unified_from_bundle(b).state is not None
+
+
+def test_expected_executable_entries_cover_block_path():
+    assert expected_executable_entries() == [
+        "pytree_decode", "pytree_reset", "resident_decode", "resident_reset",
+    ]
+    assert block_entry_name("resident", 4) == "resident_block_4"
+    blk = expected_executable_entries(block_size=4)
+    assert set(blk) == set(expected_executable_entries()) | {
+        "pytree_block_4", "resident_block_4",
+    }
+    assert blk == sorted(blk)
 
 
 def test_bundle_v1_loads_through_shim_with_warning():
@@ -327,6 +390,48 @@ def test_lookup_nearest_tie_breaks_on_unified_total(tmp_path):
     (tmp_path / "manifest.json").write_text(json.dumps(index))
     key, b = man.lookup_nearest(cfg, n_slots=2, max_len=64)
     assert b.n_slots == 2 and b.max_len == 128, key
+
+
+def test_lookup_nearest_upgrades_legacy_index_once(tmp_path, monkeypatch):
+    """Satellite: a pre-``unified_total`` manifest is upgraded ONCE — the
+    first nearest lookup loads each legacy bundle, stamps its unified
+    footprint into the index, and persists it, so later handles rank
+    admissible buckets without re-reading any bundle file."""
+    from repro.core import artifact
+
+    cfg = get_reduced("qwen3-0.6b")
+    man = BundleManifest(tmp_path)
+    for max_len in (64, 128):
+        man.publish(
+            bucket_key(cfg, n_slots=2, max_len=max_len),
+            _bundle(cfg, n_slots=2, max_len=max_len),
+        )
+    index = json.loads((tmp_path / "manifest.json").read_text())
+    for entry in index["buckets"].values():
+        del entry["unified_total"]
+    (tmp_path / "manifest.json").write_text(json.dumps(index))
+
+    key, b = BundleManifest(tmp_path).lookup_nearest(
+        cfg, n_slots=2, max_len=96
+    )
+    assert b.max_len == 128
+    ondisk = json.loads((tmp_path / "manifest.json").read_text())
+    assert all(
+        isinstance(e["unified_total"], int)
+        for e in ondisk["buckets"].values()
+    )
+
+    loads = []
+    real = artifact.load_bundle
+    monkeypatch.setattr(
+        artifact, "load_bundle", lambda p: (loads.append(p), real(p))[1]
+    )
+    key, b = BundleManifest(tmp_path).lookup_nearest(
+        cfg, n_slots=2, max_len=96
+    )
+    assert b.max_len == 128
+    # only the selected winner is read — ranking came from the index
+    assert len(loads) == 1
 
 
 def test_resolve_bundle_miss_lists_compiled_buckets(tmp_path):

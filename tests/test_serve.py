@@ -314,7 +314,7 @@ def test_v1_bundle_on_v2_engine_falls_back(
     cfg, params, bundle_dir, tmp_path, monkeypatch
 ):
     """Satellite: a v1 document loads through the shim (DeprecationWarning)
-    but its fingerprint hashed format v1 — this v2 engine must refuse it
+    but its fingerprint hashed schema v1 — a current engine must refuse it
     and plan at construction, preserving the fallback semantics."""
     from repro.core import artifact
     from repro.core.artifact import BundleManifest
@@ -323,8 +323,11 @@ def test_v1_bundle_on_v2_engine_falls_back(
         bucket_key(cfg, n_slots=N_SLOTS, max_len=MAX_LEN)
     )
     with monkeypatch.context() as m:
-        # what decode_fingerprint produced when this build wrote v1
-        m.setattr(artifact, "BUNDLE_FORMAT_VERSION", 1)
+        # what decode_fingerprint produced when this build wrote v1 (the
+        # fingerprint schema rolls independently of the bundle format, so
+        # v2 documents keep matching a v3 engine — only the v1-era hash
+        # is stale)
+        m.setattr(artifact, "FINGERPRINT_SCHEMA_VERSION", 1)
         v1_fp = artifact.decode_fingerprint(
             cfg, n_slots=N_SLOTS, max_len=MAX_LEN
         )
