@@ -193,6 +193,60 @@ print(f"scan-block serve: {block['host_syncs']} syncs over "
       f"greedy tokens + slot log identical")
 PY
 
+# paged state serving: a --page-size bucket compiles through the same
+# pre-publish gate into a v3 manifest whose --strict lint baseline now
+# covers the paged-* soundness codes + paged-meta-mismatch, serves with
+# zero traces / plans / state layouts / XLA compiles, emits tokens
+# identical to the symmetric host loop, and reports honest page
+# economics: live state bytes == pages_live x page_size, peak pool
+# usage strictly under the symmetric plan's constant footprint.
+python - <<'PY'
+import sys
+import tempfile
+from repro.analysis import counters
+from repro.analysis.lint import main as lint_main
+from repro.launch import serve
+from repro.launch.compile import main as compile_main
+
+with tempfile.TemporaryDirectory() as d:
+    sys.argv = ["compile", "--arch", "qwen3-0.6b", "--slots", "2",
+                "--max-len", "64", "--page-size", "1024", "--out", d]
+    compile_main()
+    rc = lint_main(["--strict", "bundles", d])
+    assert rc == 0, f"paged bundle failed the --strict lint baseline ({rc})"
+    argv = ["--arch", "qwen3-0.6b", "--requests", "3", "--prompt-len", "4",
+            "--max-new", "4", "--slots", "2", "--max-len", "64"]
+    with counters.capture(
+        "trace_calls", "plan_calls", "state_plan_calls", "compile_calls"
+    ) as cap:
+        paged = serve.run(argv + ["--page-size", "1024",
+                                  "--plan-bundle", d])
+    assert paged["plan_source"] == "bundle", paged["bundle_warning"]
+    for c in ("trace_calls", "plan_calls", "state_plan_calls",
+              "compile_calls"):
+        assert cap.delta(c) == 0, f"paged bundle serve paid {c}"
+    assert paged["page_size"] == 1024, paged
+    # report honesty: live bytes ARE pages_live x page_size (drained
+    # engine: both zero), and the peak never exceeded the pool
+    assert paged["state_live_bytes"] == paged["state_pages_live"] * 1024, paged
+    peak = paged["state_pages_live_peak"]
+    assert 0 < peak <= paged["state_pages_total"], paged
+    # the paged win: peak pool bytes strictly under the symmetric plan's
+    # constant n_slots x slot_stride footprint at this fill
+    assert peak * 1024 < paged["state_planned_bytes"], (
+        f"paged peak {peak * 1024} B >= symmetric {paged['state_planned_bytes']} B"
+    )
+    assert paged["page_log"], "paged serve logged no page residencies"
+    # byte-identity headline: same tokens as the symmetric host loop
+    sym = serve.run(argv)
+    assert paged["tokens_per_request"] == sym["tokens_per_request"], (
+        "paged tokens diverged from the symmetric baseline"
+    )
+print(f"paged serve: --strict lint clean, zero traces/plans/compiles, "
+      f"live bytes == pages_live x page_size, peak "
+      f"{peak} pages < symmetric footprint, tokens identical")
+PY
+
 if [[ -z "${SKIP_BENCH:-}" ]]; then
     python benchmarks/planner_scaling.py --quick --out BENCH_planner.json
     # order/fusion search smoke: asserts footprint <= baseline on every

@@ -156,6 +156,18 @@ def lint_bundle(
                 where,
             )
         )
+    plan_page = getattr(bundle.state_plan, "page_size", None)
+    serve_page = (serve_params or {}).get("page_size")
+    if bundle.state_plan is not None and plan_page != serve_page:
+        findings.append(
+            _finding(
+                "paged-meta-mismatch",
+                f"serve config says page_size={serve_page}, state plan "
+                f"carries page_size={plan_page} — a paged engine "
+                f"resolving this bucket would bind the wrong backend",
+                where,
+            )
+        )
 
     pack = bundle.executables
     if pack is not None:
@@ -174,7 +186,8 @@ def lint_bundle(
             )
         block = int((serve_params or {}).get("block_size", 1))
         missing = sorted(
-            set(expected_executable_entries(block)) - set(pack.entries)
+            set(expected_executable_entries(block, paged=bool(serve_page)))
+            - set(pack.entries)
         )
         if missing:
             findings.append(
@@ -296,23 +309,31 @@ def _coverage_gaps(keys: list[str]) -> list[Finding]:
         got = parse_bucket_key(key)
         if got is None:
             continue
-        fam = (got["arch"], got["n_layers"], got["d_model"], got["dtype"])
+        # paged and symmetric buckets are separate families: their grids
+        # are swept (and served) independently
+        fam = (
+            got["arch"], got["n_layers"], got["d_model"], got["dtype"],
+            got.get("page_size"),
+        )
         families.setdefault(fam, set()).add((got["n_slots"], got["max_len"]))
     findings = []
-    for fam, cells in sorted(families.items()):
+    for fam, cells in sorted(
+        families.items(), key=lambda kv: tuple(map(str, kv[0]))
+    ):
         slots = sorted({s for s, _ in cells})
         lens = sorted({l for _, l in cells})
         missing = [
             (s, l) for s in slots for l in lens if (s, l) not in cells
         ]
         if missing:
+            page = f"|page{fam[4]}" if fam[4] else ""
             findings.append(
                 _finding(
                     "coverage-gap",
                     f"sweep grid incomplete: compiled slots {slots} x "
                     f"lens {lens} but missing "
                     f"{['slots%d|len%d' % m for m in missing]}",
-                    f"{fam[0]}|L{fam[1]}|d{fam[2]}|{fam[3]}",
+                    f"{fam[0]}|L{fam[1]}|d{fam[2]}|{fam[3]}{page}",
                     severity="warning",
                 )
             )

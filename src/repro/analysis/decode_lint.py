@@ -344,7 +344,7 @@ def lower_decode_programs(
     return programs
 
 
-_BLOCK_ENTRY_RE = re.compile(r"resident_block_(\d+)")
+_BLOCK_ENTRY_RE = re.compile(r"(?:resident|paged)_block_(\d+)")
 
 
 def lint_executables(bundle) -> list[Finding]:
@@ -363,9 +363,16 @@ def lint_executables(bundle) -> list[Finding]:
     from repro.runtime.aot import deserialize_compiled
 
     findings: list[Finding] = []
-    state_nbytes = (
-        bundle.state_plan.total_size if bundle.state_plan is not None else 0
-    )
+    sp = bundle.state_plan
+    # Paged buckets donate the *physical* pool buffer (null page + pool
+    # pages), not the logical symmetric region — lint against that size.
+    state_nbytes = 0
+    if sp is not None:
+        state_nbytes = (
+            sp.phys_total_size
+            if getattr(sp, "page_size", None) is not None
+            else sp.total_size
+        )
     for name, entry in sorted(pack.entries.items()):
         label = f"{bundle.arch}:{name}"
         try:
@@ -380,7 +387,7 @@ def lint_executables(bundle) -> list[Finding]:
                 )
             )
             continue
-        if not name.startswith("resident_"):
+        if not name.startswith(("resident_", "paged_")):
             continue  # pytree entries have no donated state buffer
         m = _BLOCK_ENTRY_RE.fullmatch(name)
         findings.extend(

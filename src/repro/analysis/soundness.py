@@ -422,6 +422,121 @@ def certify_state_plan(
                     label,
                 )
             )
+    if getattr(sp, "page_size", None) is not None:
+        findings += _certify_paged_state(sp, label=label)
+    return findings
+
+
+def _certify_paged_state(sp, *, label: str) -> list[Finding]:
+    """The paged extras over :func:`certify_state_plan`'s symmetric
+    checks (duck-typed — any plan carrying ``page_size`` qualifies, so a
+    deserialized bundle certifies without importing planner classes):
+    the physical pool really is ``n_pages_pool`` disjoint, page-aligned,
+    in-bounds pages; the token spans re-derive to each leaf's per-slot
+    payload; a pool too small to map even one full slot is flagged."""
+    import numpy as np
+
+    findings: list[Finding] = []
+    if sp.page_size <= 0:
+        findings.append(
+            _finding(
+                "paged-page-size", f"page size {sp.page_size} <= 0", label
+            )
+        )
+        return findings  # every pool check below divides by it
+    if sp.n_pages_pool < 1:
+        findings.append(
+            _finding(
+                "paged-pool-empty",
+                f"page pool holds {sp.n_pages_pool} pages — no request "
+                f"can ever be admitted",
+                label,
+            )
+        )
+    pages_per_slot = -(-sp.slot_stride // sp.page_size)
+    if 0 < sp.n_pages_pool < pages_per_slot:
+        findings.append(
+            Finding(
+                pass_name=PASS,
+                code="paged-pool-short",
+                message=(
+                    f"pool of {sp.n_pages_pool} pages cannot map one "
+                    f"full slot ({pages_per_slot} pages/slot) — "
+                    f"max_len requests will be refused"
+                ),
+                where=label,
+                severity="warning",
+            )
+        )
+    if len(sp.page_offsets) != sp.n_pages_pool:
+        findings.append(
+            _finding(
+                "paged-pool-empty",
+                f"{len(sp.page_offsets)} page offsets for a pool of "
+                f"{sp.n_pages_pool}",
+                label,
+            )
+        )
+    phys_total = (sp.n_pages_pool + 1) * sp.page_size
+    seen: dict[int, int] = {0: -1}  # offset -> pool index (null page = -1)
+    for i, off in enumerate(sp.page_offsets):
+        if off < 0 or off % sp.page_size:
+            findings.append(
+                _finding(
+                    "paged-page-unaligned",
+                    f"pool page {i} at offset {off} not page-aligned and "
+                    f"non-negative",
+                    label,
+                )
+            )
+        if off + sp.page_size > phys_total:
+            findings.append(
+                _finding(
+                    "paged-page-spill",
+                    f"pool page {i} spans [{off}, {off + sp.page_size}) "
+                    f"past physical end {phys_total}",
+                    label,
+                )
+            )
+        if off in seen:
+            other = "the null page" if seen[off] < 0 else f"page {seen[off]}"
+            findings.append(
+                _finding(
+                    "paged-page-collision",
+                    f"pool page {i} at offset {off} collides with {other}",
+                    label,
+                )
+            )
+        else:
+            seen[off] = i
+    if len(sp.token_spans) != len(sp.leaves):
+        findings.append(
+            _finding(
+                "paged-span-size",
+                f"{len(sp.token_spans)} token spans for {len(sp.leaves)} "
+                f"leaves",
+                label,
+            )
+        )
+        return findings
+    for leaf, span in zip(sp.leaves, sp.token_spans):
+        if span is None:
+            continue
+        where = f"{label}:{leaf.path}"
+        nbytes = math.prod(leaf.shape) * np.dtype(leaf.dtype).itemsize
+        if nbytes % max(sp.n_slots, 1):
+            continue  # already reported as state-indivisible
+        n_chunks, n_rows, row_nbytes = span
+        if n_chunks * n_rows * row_nbytes != nbytes // sp.n_slots:
+            findings.append(
+                _finding(
+                    "paged-span-size",
+                    f"token span {span} covers "
+                    f"{n_chunks * n_rows * row_nbytes} B, leaf carries "
+                    f"{nbytes // sp.n_slots} B/slot",
+                    where,
+                )
+            )
     return findings
 
 

@@ -120,25 +120,35 @@ def serve_fingerprint(
     greedy: bool = True,
     temperature: float = 1.0,
     top_k: int = 0,
+    page_size: "int | None" = None,
+    page_pool: "int | None" = None,
 ) -> "dict | None":
     """Canonical serve-loop payload for :func:`decode_fingerprint`: the
     sampling knobs + scan block size that shape the compiled serving
     graph (the scan length and the sampling ops live inside the decode
-    jit on the block path). Returns ``None`` for the default single-wave
-    greedy host loop so default fingerprints — and every pre-existing
-    bundle — are unchanged. Greedy canonicalizes ``temperature``/``top_k``
-    away (they do not shape the greedy graph); the sample seed never
-    joins (it is a traced key argument, not graph structure)."""
+    jit on the block path), and the paged-state knobs (the page table is
+    a decode input whose shape — and the physical buffer size — follow
+    ``page_size``/``page_pool``). Returns ``None`` for the default
+    single-wave greedy host loop so default fingerprints — and every
+    pre-existing bundle — are unchanged. Greedy canonicalizes
+    ``temperature``/``top_k`` away (they do not shape the greedy graph);
+    the sample seed never joins (it is a traced key argument, not graph
+    structure)."""
     if greedy:
         temperature, top_k = 1.0, 0
-    if block_size == 1 and greedy:
+    if block_size == 1 and greedy and not page_size:
         return None
-    return {
+    payload = {
         "block_size": int(block_size),
         "greedy": bool(greedy),
         "temperature": float(temperature),
         "top_k": int(top_k),
     }
+    if page_size:
+        payload["page_size"] = int(page_size)
+        if page_pool is not None:
+            payload["page_pool"] = int(page_pool)
+    return payload
 
 
 def decode_fingerprint(
@@ -189,32 +199,45 @@ def graph_fingerprint(graph: "Graph") -> str:
     )
 
 
-def bucket_key(cfg: "ArchConfig", *, n_slots: int, max_len: int) -> str:
-    """Human-readable manifest index for an (arch, n_slots, max_len, dtype)
-    serving bucket. Layer count / width distinguish full configs from
-    their ``reduced()`` variants, which share ``cfg.name``. The fingerprint
+def bucket_key(
+    cfg: "ArchConfig", *, n_slots: int, max_len: int,
+    page_size: "int | None" = None,
+) -> str:
+    """Human-readable manifest index for an (arch, n_slots, max_len, dtype
+    [, page_size]) serving bucket. Layer count / width distinguish full
+    configs from their ``reduced()`` variants, which share ``cfg.name``;
+    paged buckets carry a ``|page{P}`` suffix so a paged and a symmetric
+    compile of the same shape coexist in one manifest. The fingerprint
     (stored alongside) remains the actual correctness guard."""
-    return (
+    key = (
         f"{cfg.name}|L{cfg.n_layers}|d{cfg.d_model}"
         f"|slots{n_slots}|len{max_len}|{cfg.dtype}"
     )
+    if page_size:
+        key += f"|page{int(page_size)}"
+    return key
 
 
 _BUCKET_KEY_RE = re.compile(
     r"(?P<arch>.+)\|L(?P<n_layers>\d+)\|d(?P<d_model>\d+)"
-    r"\|slots(?P<n_slots>\d+)\|len(?P<max_len>\d+)\|(?P<dtype>[^|]+)"
+    r"\|slots(?P<n_slots>\d+)\|len(?P<max_len>\d+)\|(?P<dtype>[^|]+?)"
+    r"(\|page(?P<page_size>\d+))?"
 )
 
 
 def parse_bucket_key(key: str) -> dict | None:
     """Inverse of :func:`bucket_key`: the structured bucket, or None for a
-    foreign/hand-made key (bucket auto-selection skips those)."""
+    foreign/hand-made key (bucket auto-selection skips those).
+    ``page_size`` is None for symmetric buckets."""
     m = _BUCKET_KEY_RE.fullmatch(key)
     if m is None:
         return None
     out: dict[str, Any] = m.groupdict()
     for field in ("n_layers", "d_model", "n_slots", "max_len"):
         out[field] = int(out[field])
+    out["page_size"] = (
+        int(out["page_size"]) if out["page_size"] is not None else None
+    )
     return out
 
 
@@ -224,10 +247,14 @@ def bundle_bucket_key(bundle: PlanBundle) -> str | None:
     fields (v1 shims, hand-built test bundles)."""
     if not bundle.n_layers or not bundle.d_model:
         return None
-    return (
+    key = (
         f"{bundle.arch}|L{bundle.n_layers}|d{bundle.d_model}"
         f"|slots{bundle.n_slots}|len{bundle.max_len}|{bundle.dtype}"
     )
+    page_size = getattr(bundle.state_plan, "page_size", None)
+    if page_size:
+        key += f"|page{int(page_size)}"
+    return key
 
 
 # ------------------------------------------------------------- executables
@@ -294,20 +321,24 @@ def block_entry_name(backend: str, length: int) -> str:
     return f"{backend}_block_{int(length)}"
 
 
-def expected_executable_entries(block_size: int = 1) -> list[str]:
+def expected_executable_entries(
+    block_size: int = 1, *, paged: bool = False
+) -> list[str]:
     """The entry names a complete pack carries for one serving bucket:
     decode + reset for BOTH state backends (residency is a serving-time
-    knob the compile step cannot predict), plus the full-size scan block
-    on block-mode buckets (tail blocks have engine-chosen shorter
-    lengths and lazy-compile)."""
+    knob the compile step cannot predict; paged buckets pair the paged
+    backend with the pytree fallback), plus the full-size scan block on
+    block-mode buckets (tail blocks have engine-chosen shorter lengths
+    and lazy-compile)."""
+    backend = "paged" if paged else "resident"
     names = [
         "pytree_decode",
         "pytree_reset",
-        "resident_decode",
-        "resident_reset",
+        f"{backend}_decode",
+        f"{backend}_reset",
     ]
     if block_size > 1:
-        names.append(block_entry_name("resident", block_size))
+        names.append(block_entry_name(backend, block_size))
         names.append(block_entry_name("pytree", block_size))
     return sorted(names)
 
@@ -775,18 +806,22 @@ class BundleManifest:
         return index
 
     def lookup_nearest(
-        self, cfg: "ArchConfig", *, n_slots: int, max_len: int
+        self, cfg: "ArchConfig", *, n_slots: int, max_len: int,
+        page_size: "int | None" = None,
     ) -> tuple[str, PlanBundle] | None:
         """Bucket auto-selection: the exact bucket if compiled, else the
         smallest-footprint admissible compiled bucket. Admissible means
-        identical arch/layers/width/dtype with ``max_len >= requested``
-        (a longer cache serves any shorter request) AND
-        ``n_slots >= requested`` (slots are the §4 shared objects — a
-        bigger pool is admissible, just wasteful). Ties break on the
-        smallest unified footprint (activation + state), then the
-        smallest (max_len, n_slots) for determinism. None when no
-        admissible bucket exists."""
-        exact = bucket_key(cfg, n_slots=n_slots, max_len=max_len)
+        identical arch/layers/width/dtype/page_size with
+        ``max_len >= requested`` (a longer cache serves any shorter
+        request) AND ``n_slots >= requested`` (slots are the §4 shared
+        objects — a bigger pool is admissible, just wasteful); paged and
+        symmetric buckets are distinct families and never substitute for
+        each other. Ties break on the smallest unified footprint
+        (activation + state), then the smallest (max_len, n_slots) for
+        determinism. None when no admissible bucket exists."""
+        exact = bucket_key(
+            cfg, n_slots=n_slots, max_len=max_len, page_size=page_size
+        )
         buckets = self.buckets()
         if exact in buckets:
             return exact, load_bundle(self.dir / buckets[exact]["file"])
@@ -841,24 +876,28 @@ def resolve_bundle(
     n_slots: int,
     max_len: int,
     nearest: bool = False,
+    page_size: "int | None" = None,
 ) -> PlanBundle:
     """Accept what a serving caller naturally has: a loaded bundle, a path
     to one bundle file, or a manifest directory (looked up by bucket key;
     with ``nearest=True`` the lookup auto-selects the smallest-footprint
     admissible compiled bucket — ``max_len`` and ``n_slots`` both
-    >= requested). Raises ``FileNotFoundError``/
-    ``ValueError`` on missing or unreadable sources — a manifest miss
-    lists the bucket keys that DO exist; fingerprint verification is the
-    caller's job (the engine checks and falls back)."""
+    >= requested, same ``page_size`` family). Raises
+    ``FileNotFoundError``/``ValueError`` on missing or unreadable sources
+    — a manifest miss lists the bucket keys that DO exist; fingerprint
+    verification is the caller's job (the engine checks and falls
+    back)."""
     if isinstance(source, PlanBundle):
         return source
     path = Path(source)
     if path.is_dir():
-        key = bucket_key(cfg, n_slots=n_slots, max_len=max_len)
+        key = bucket_key(
+            cfg, n_slots=n_slots, max_len=max_len, page_size=page_size
+        )
         manifest = BundleManifest(path)
         if nearest:
             found = manifest.lookup_nearest(
-                cfg, n_slots=n_slots, max_len=max_len
+                cfg, n_slots=n_slots, max_len=max_len, page_size=page_size
             )
             if found is not None:
                 return found[1]

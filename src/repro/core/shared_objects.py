@@ -352,6 +352,61 @@ def from_slot_log(
     return asn
 
 
+def from_page_log(
+    page_log: Sequence[tuple[int, int, int, int]],
+    *,
+    n_pages: int | None = None,
+    page_size: int = 1,
+    state_plan=None,
+) -> SharedObjectsAssignment:
+    """Build the page-granular §4-style assignment from a serving page
+    log (``(page, first_wave, last_wave, request_id)`` tuples, as
+    recorded by the paged state backend): POOL PAGES are the shared
+    objects, request-page holds the tensors, the decode wave the
+    operator index. The twin of :func:`from_slot_log` one level down —
+    it proves no page served two requests at overlapping waves, i.e.
+    the runtime page allocator never double-assigned a live page.
+
+    Pass ``state_plan`` (a :class:`~repro.core.unified.PagedStatePlan`)
+    to derive ``n_pages``/``page_size`` from the plan the engine
+    actually serves from. Physical page indices are 1-based (0 is the
+    reserved null page, which is never allocated and must never appear
+    in a log). Assignment keys are ``(request_id, page)`` — one request
+    legitimately holds many pages."""
+    if state_plan is not None:
+        n_pages = state_plan.n_pages_pool
+        page_size = state_plan.page_size
+    if n_pages is None:
+        raise ValueError("from_page_log needs n_pages or a paged state_plan")
+    asn = SharedObjectsAssignment(
+        strategy="page_log",
+        objects=[
+            SharedObject(object_id=p, size=page_size)
+            for p in range(1, n_pages + 1)
+        ],
+        assignment={},
+    )
+    by_id = {obj.object_id: obj for obj in asn.objects}
+    for page, first, last, rid in page_log:
+        obj = by_id.get(page)
+        if obj is None:
+            raise ValueError(
+                f"request {rid}: page {page} outside the pool [1, {n_pages}]"
+                + (" (0 is the reserved null page)" if page == 0 else "")
+            )
+        # closed wave intervals, same hand-off rule as from_slot_log:
+        # freed at the END of the finishing wave, reallocatable at the
+        # start of the next — sharing a wave is a double assignment
+        if obj.interval_set.overlaps(first, last):
+            raise ValueError(
+                f"request {rid}: interval [{first}, {last}] overlaps an "
+                f"earlier occupant on page {page}"
+            )
+        obj.interval_set.add(first, last, rid)
+        asn.assignment[(rid, page)] = page
+    return asn
+
+
 STRATEGIES: dict[str, Callable[[Sequence[TensorUsageRecord]], SharedObjectsAssignment]] = {
     "greedy_by_size": greedy_by_size,
     "greedy_by_size_improved": greedy_by_size_improved,

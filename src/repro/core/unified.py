@@ -45,6 +45,7 @@ from pathlib import Path
 from typing import TYPE_CHECKING, Any, Sequence
 
 from repro.core import plan_io
+from repro.core.interval_set import BestFitArena
 from repro.core.records import DEFAULT_ALIGNMENT, TensorUsageRecord, align
 
 if TYPE_CHECKING:  # keep this module importable without jax
@@ -62,6 +63,7 @@ if TYPE_CHECKING:  # keep this module importable without jax
 STATE_PLAN_CALLS = 0
 
 STATE_STRATEGY = "slots_as_shared_objects"
+PAGED_STATE_STRATEGY = "paged_shared_objects"
 
 
 # ------------------------------------------------------- cross-step state
@@ -258,8 +260,258 @@ def plan_state(
     )
 
 
+@dataclasses.dataclass
+class PagedStatePlan(StatePlan):
+    """Page-granular cross-step state layout (ROADMAP open item 2): the
+    *logical* layout is exactly the symmetric :class:`StatePlan` —
+    ``n_slots`` regions of ``slot_stride`` bytes, same leaves, same
+    ``total_size`` — but physical storage is a pool of ``n_pages_pool``
+    fixed ``page_size``-byte pages plus one reserved all-zero *null page*
+    at physical index 0. A per-slot page table (``pages_per_slot`` int32
+    entries, physical page indices; 0 = unmapped → null page) maps each
+    logical page of the slot region onto the pool, so resident state
+    scales with *live* tokens: a slot at cache length ``L`` only needs
+    the pages intersecting its live byte spans (:meth:`pages_needed`).
+
+    ``token_spans`` records, per leaf (aligned with ``leaves``), how the
+    per-slot byte range decomposes along the token axis:
+    ``(n_chunks, n_rows, row_nbytes)`` — rows ``>= L`` of every chunk are
+    dead at length ``L`` — or ``None`` for leaves that are fully live at
+    any length (length-independent SSM state, sliding-window caches).
+
+    ``total_size`` stays the logical ``n_slots * slot_stride`` (it is the
+    §4 objective the symmetric certifiers and arena layouts reason
+    about); the device buffer a paged backend allocates is
+    :attr:`phys_total_size`.
+    """
+
+    page_size: int = 0
+    n_pages_pool: int = 0
+    # physical byte offset of each pool page (page i+1 — the null page is
+    # implicit at offset 0), as carved by the interval engine
+    page_offsets: list[int] = dataclasses.field(default_factory=list)
+    token_spans: list[tuple[int, int, int] | None] = dataclasses.field(
+        default_factory=list
+    )
+
+    @property
+    def pages_per_slot(self) -> int:
+        return -(-self.slot_stride // self.page_size)
+
+    @property
+    def n_pages_total(self) -> int:
+        return self.n_pages_pool + 1
+
+    @property
+    def phys_total_size(self) -> int:
+        return self.n_pages_total * self.page_size
+
+    def live_spans(self, length: int) -> list[tuple[int, int]]:
+        """Byte spans within one slot region that are live at cache
+        length ``length`` (leaf payloads only; alignment padding is dead
+        on both the symmetric and the paged path)."""
+        import numpy as np
+
+        spans: list[tuple[int, int]] = []
+        for leaf, span in zip(self.leaves, self.token_spans):
+            used = (
+                math.prod(leaf.shape) * np.dtype(leaf.dtype).itemsize
+                // self.n_slots
+            )
+            if span is None:
+                spans.append((leaf.offset, leaf.offset + used))
+                continue
+            n_chunks, n_rows, row_nbytes = span
+            live = min(max(length, 0), n_rows) * row_nbytes
+            if live == 0:
+                continue
+            for k in range(n_chunks):
+                base = leaf.offset + k * n_rows * row_nbytes
+                spans.append((base, base + live))
+        return spans
+
+    def pages_needed(self, length: int) -> tuple[int, ...]:
+        """Logical page indices (within ``[0, pages_per_slot)``) a slot
+        must have mapped to serve a request at cache length ``length``."""
+        page = self.page_size
+        need: set[int] = set()
+        for a, b in self.live_spans(length):
+            need.update(range(a // page, (b - 1) // page + 1))
+        return tuple(sorted(need))
+
+    def live_bytes(self, length: int) -> int:
+        """Physical pool bytes one slot holds at cache length ``length``."""
+        return len(self.pages_needed(length)) * self.page_size
+
+    def summary(self) -> str:
+        return (
+            f"state[{self.strategy}]: {self.total_size / 2**20:.3f} MiB "
+            f"logical ({self.n_slots} slots x "
+            f"{self.slot_stride / 2**20:.3f} MiB), pool "
+            f"{self.n_pages_pool} x {self.page_size} B pages "
+            f"({self.phys_total_size / 2**20:.3f} MiB physical, "
+            f"{len(self.leaves)} leaves, len {self.max_len})"
+        )
+
+
+def detect_state_axes(
+    init_cache, *, n_slots: int, max_len: int
+) -> dict[str, tuple[int, int | None]]:
+    """Shape-differencing probe for the paged planner: evaluate
+    ``init_cache`` (shape level — no arrays are materialized) at the
+    bucket shape, at an alternate cache length, and at an alternate slot
+    count, and identify each leaf's slot-batch axis and token axis as the
+    unique axis that tracks the varied parameter. Returns
+    ``path -> (slot_axis, token_axis | None)`` in full-shape axes;
+    ``None`` marks a leaf whose extent does not follow ``max_len``
+    (length-independent SSM state, sliding-window caches) — such leaves
+    are conservatively treated as fully live by the paged plan."""
+    import jax
+
+    def shapes(ns: int, ml: int) -> dict[str, tuple[int, ...]]:
+        tree = jax.eval_shape(lambda: init_cache(ns, ml))
+        leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+        return {
+            jax.tree_util.keystr(p): tuple(int(d) for d in leaf.shape)
+            for p, leaf in leaves
+        }
+
+    alt_len = max_len + 8
+    alt_slots = n_slots + 1
+    base = shapes(n_slots, max_len)
+    by_len = shapes(n_slots, alt_len)
+    by_slots = shapes(alt_slots, max_len)
+    axes: dict[str, tuple[int, int | None]] = {}
+    for path, shape in base.items():
+        s_shape = by_slots.get(path)
+        l_shape = by_len.get(path)
+        if (
+            s_shape is None or l_shape is None
+            or len(s_shape) != len(shape) or len(l_shape) != len(shape)
+        ):
+            raise ValueError(
+                f"state leaf {path!r}: cache structure changes with the "
+                f"bucket shape — cannot derive a paged layout"
+            )
+        slot_ax = [
+            i for i, (a, b) in enumerate(zip(shape, s_shape)) if a != b
+        ]
+        if (
+            len(slot_ax) != 1
+            or shape[slot_ax[0]] != n_slots
+            or s_shape[slot_ax[0]] != alt_slots
+        ):
+            raise ValueError(
+                f"state leaf {path!r}: no unambiguous slot batch axis "
+                f"({shape} vs {s_shape} at {alt_slots} slots)"
+            )
+        tok_ax = [
+            i for i, (a, b) in enumerate(zip(shape, l_shape)) if a != b
+        ]
+        token: int | None = None
+        if (
+            len(tok_ax) == 1
+            and shape[tok_ax[0]] == max_len
+            and l_shape[tok_ax[0]] == alt_len
+        ):
+            token = tok_ax[0]
+        axes[path] = (slot_ax[0], token)
+    return axes
+
+
+def plan_paged_state(
+    records: Sequence[StateRecord],
+    *,
+    n_slots: int,
+    max_len: int,
+    page_size: int,
+    page_pool: int | None = None,
+    axes: dict[str, tuple[int, int | None]] | None = None,
+    alignment: int = DEFAULT_ALIGNMENT,
+) -> PagedStatePlan:
+    """Lay out the cross-step state at page granularity: the symmetric
+    per-slot leaf packing of :func:`plan_state` becomes the *logical*
+    layout, the physical pool is carved into ``page_pool`` fixed-size
+    pages (default ``n_slots * pages_per_slot`` — enough to map every
+    slot fully, so the default pool can never refuse an admission the
+    symmetric plan would accept) by the interval engine
+    (:class:`~repro.core.interval_set.BestFitArena`: every page is a
+    whole-serving-lifetime record, so best-fit packs them end to end
+    after the reserved null page at offset 0), and per-leaf token spans
+    from ``axes`` (see :func:`detect_state_axes`) record which bytes are
+    live at a given cache length."""
+    import numpy as np
+
+    if page_size <= 0:
+        raise ValueError(f"page_size must be positive, got {page_size}")
+    base = plan_state(
+        records, n_slots=n_slots, max_len=max_len, alignment=alignment
+    )
+    token_spans: list[tuple[int, int, int] | None] = []
+    for leaf in base.leaves:
+        slot_ax, tok_ax = (axes or {}).get(leaf.path, (0, None))
+        if tok_ax is None:
+            token_spans.append(None)
+            continue
+        per_slot_shape = tuple(
+            d for i, d in enumerate(leaf.shape) if i != slot_ax
+        )
+        tok = tok_ax - (1 if slot_ax < tok_ax else 0)
+        n_chunks = math.prod(per_slot_shape[:tok]) if tok else 1
+        n_rows = per_slot_shape[tok]
+        row_nbytes = (
+            math.prod(per_slot_shape[tok + 1:])
+            * np.dtype(leaf.dtype).itemsize
+        )
+        token_spans.append((int(n_chunks), int(n_rows), int(row_nbytes)))
+
+    pages_per_slot = -(-base.slot_stride // page_size)
+    n_pool = (
+        page_pool if page_pool is not None else n_slots * pages_per_slot
+    )
+    if n_pool < 1:
+        raise ValueError(
+            f"page pool must hold at least one page, got {n_pool}"
+        )
+    arena = BestFitArena()
+    # null page first: physical offset 0 is the reserved all-zero page
+    arena.place(
+        TensorUsageRecord(first_op=0, last_op=0, size=page_size, tensor_id=0)
+    )
+    page_offsets = [
+        arena.place(
+            TensorUsageRecord(
+                first_op=0, last_op=0, size=page_size, tensor_id=i + 1
+            )
+        )
+        for i in range(n_pool)
+    ]
+    phys_total = (n_pool + 1) * page_size
+    seen: set[int] = {0}
+    for i, off in enumerate(page_offsets):
+        if off % page_size or off in seen or off + page_size > phys_total:
+            raise ValueError(
+                f"page carving produced an unusable offset {off} for pool "
+                f"page {i} (page_size {page_size}, pool {n_pool})"
+            )
+        seen.add(off)
+    return PagedStatePlan(
+        n_slots=n_slots,
+        max_len=max_len,
+        alignment=alignment,
+        leaves=base.leaves,
+        slot_stride=base.slot_stride,
+        total_size=base.total_size,
+        strategy=PAGED_STATE_STRATEGY,
+        page_size=page_size,
+        n_pages_pool=n_pool,
+        page_offsets=page_offsets,
+        token_spans=token_spans,
+    )
+
+
 def state_plan_to_obj(sp: StatePlan) -> dict:
-    return {
+    obj = {
         "n_slots": sp.n_slots,
         "max_len": sp.max_len,
         "alignment": sp.alignment,
@@ -271,19 +523,45 @@ def state_plan_to_obj(sp: StatePlan) -> dict:
             for l in sp.leaves
         ],
     }
+    if isinstance(sp, PagedStatePlan):
+        obj["page_size"] = sp.page_size
+        obj["n_pages_pool"] = sp.n_pages_pool
+        obj["page_offsets"] = list(sp.page_offsets)
+        obj["token_spans"] = [
+            list(s) if s is not None else None for s in sp.token_spans
+        ]
+    return obj
 
 
 def state_plan_from_obj(obj: dict) -> StatePlan:
+    leaves = [
+        StateLeaf(
+            path=p, shape=tuple(shape), dtype=dt, slot_nbytes=nb, offset=off
+        )
+        for p, shape, dt, nb, off in obj["leaves"]
+    ]
+    if "page_size" in obj:
+        return PagedStatePlan(
+            n_slots=obj["n_slots"],
+            max_len=obj["max_len"],
+            alignment=obj["alignment"],
+            leaves=leaves,
+            slot_stride=obj["slot_stride"],
+            total_size=obj["total_size"],
+            strategy=obj["strategy"],
+            page_size=obj["page_size"],
+            n_pages_pool=obj["n_pages_pool"],
+            page_offsets=list(obj["page_offsets"]),
+            token_spans=[
+                tuple(s) if s is not None else None
+                for s in obj["token_spans"]
+            ],
+        )
     return StatePlan(
         n_slots=obj["n_slots"],
         max_len=obj["max_len"],
         alignment=obj["alignment"],
-        leaves=[
-            StateLeaf(
-                path=p, shape=tuple(shape), dtype=dt, slot_nbytes=nb, offset=off
-            )
-            for p, shape, dt, nb, off in obj["leaves"]
-        ],
+        leaves=leaves,
         slot_stride=obj["slot_stride"],
         total_size=obj["total_size"],
         strategy=obj["strategy"],
@@ -313,9 +591,16 @@ class PlanSpec:
     n_slots: int | None = None
     max_len: int | None = None
     # serve-loop identity (artifact.serve_fingerprint payload): block size
-    # + sampling knobs when the bucket targets the scan-block decode path;
+    # + sampling knobs when the bucket targets the scan-block decode path,
+    # page_size/page_pool when it targets the paged state backend;
     # None = the default single-wave greedy host loop
     serve_params: dict | None = None
+    # paged state (None = symmetric max_len slot regions): fixed page size
+    # in bytes, pool size in pages (None = n_slots * pages_per_slot), and
+    # the per-leaf (slot_axis, token_axis) map from detect_state_axes
+    page_size: int | None = None
+    page_pool: int | None = None
+    state_token_axes: dict | None = None
     # strategy / search knobs
     mode: str = "offsets"
     strategy: str = "auto"
@@ -411,6 +696,9 @@ def _spec_fingerprint(spec: PlanSpec, records, state_records) -> str:
     }
     if spec.serve_params:
         payload["serve_params"] = spec.serve_params
+    if spec.page_size:
+        payload["page_size"] = spec.page_size
+        payload["page_pool"] = spec.page_pool
     text = json.dumps(payload, sort_keys=True, separators=(",", ":"))
     return hashlib.sha256(text.encode()).hexdigest()
 
@@ -509,12 +797,25 @@ def plan(spec: PlanSpec) -> UnifiedPlan:
     if spec.state_records is not None:
         if spec.n_slots is None or spec.max_len is None:
             raise ValueError("state_records need n_slots and max_len")
-        state = plan_state(
-            spec.state_records,
-            n_slots=spec.n_slots,
-            max_len=spec.max_len,
-            alignment=spec.alignment,
-        )
+        if spec.page_size:
+            state = plan_paged_state(
+                spec.state_records,
+                n_slots=spec.n_slots,
+                max_len=spec.max_len,
+                page_size=spec.page_size,
+                page_pool=spec.page_pool,
+                axes=spec.state_token_axes,
+                alignment=spec.alignment,
+            )
+            provenance["page_size"] = state.page_size
+            provenance["page_pool"] = state.n_pages_pool
+        else:
+            state = plan_state(
+                spec.state_records,
+                n_slots=spec.n_slots,
+                max_len=spec.max_len,
+                alignment=spec.alignment,
+            )
         provenance["state_total_bytes"] = state.total_size
         provenance["state_leaves"] = len(state.leaves)
 
@@ -665,10 +966,12 @@ class PlanSession:
 
         nearest = self.nearest and self.manifest_dir is not None
         source = self.bundle if self.bundle is not None else self.manifest_dir
+        # paged engines resolve within their own |page{P} bucket family
+        page_size = (serve_params or {}).get("page_size")
         try:
             bundle = artifact.resolve_bundle(
                 source, cfg, n_slots=n_slots, max_len=max_len,
-                nearest=nearest,
+                nearest=nearest, page_size=page_size,
             )
         except Exception as e:
             # a bad artifact degrades to plan-at-construction, never

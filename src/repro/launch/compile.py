@@ -80,6 +80,7 @@ from repro.core.planner import MemoryPlan
 from repro.core.unified import (
     PlanSpec,
     UnifiedPlan,
+    detect_state_axes,
     plan as plan_unified,
     state_records_from_pytree,
 )
@@ -182,6 +183,8 @@ def compile_decode_plan(
     greedy: bool = True,
     temperature: float = 1.0,
     top_k: int = 0,
+    page_size: int | None = None,
+    page_pool: int | None = None,
     lint: bool = True,
     aot: bool = True,
 ) -> CompileResult:
@@ -199,6 +202,7 @@ def compile_decode_plan(
     serve_params = serve_fingerprint(
         block_size=block_size, greedy=greedy,
         temperature=temperature, top_k=top_k,
+        page_size=page_size, page_pool=page_pool,
     )
     decode, specs = _decode_specs(cfg, n_slots=n_slots, max_len=max_len)
     graph = trace_graph(decode, *specs, name=f"{cfg.name}-decode")
@@ -217,6 +221,15 @@ def compile_decode_plan(
         search_iters=search_iters,
         fusion_rounds=fusion_rounds,
         cache=cache,
+        page_size=page_size,
+        page_pool=page_pool,
+        state_token_axes=(
+            detect_state_axes(
+                Model.for_config(cfg).init_cache,
+                n_slots=n_slots, max_len=max_len,
+            )
+            if page_size else None
+        ),
     ))
     best_plan = unified.activation
 
@@ -267,7 +280,7 @@ def compile_decode_plan(
             raise LintGateError(
                 report,
                 context=f"refusing to publish "
-                f"{bucket_key(cfg, n_slots=n_slots, max_len=max_len)}",
+                f"{bucket_key(cfg, n_slots=n_slots, max_len=max_len, page_size=page_size)}",
             )
     if aot:
         # behind the lint gate on purpose: an unsound plan is refused
@@ -302,7 +315,7 @@ def compile_decode_plan(
                 raise LintGateError(
                     report,
                     context=f"refusing to publish AOT executables for "
-                    f"{bucket_key(cfg, n_slots=n_slots, max_len=max_len)}",
+                    f"{bucket_key(cfg, n_slots=n_slots, max_len=max_len, page_size=page_size)}",
                 )
     outcome = unified.search
     return CompileResult(
@@ -327,7 +340,8 @@ def compile_and_publish(
 ) -> CompileResult:
     res = compile_decode_plan(cfg, n_slots=n_slots, max_len=max_len, **kwargs)
     BundleManifest(out_dir).publish(
-        bucket_key(cfg, n_slots=n_slots, max_len=max_len),
+        bucket_key(cfg, n_slots=n_slots, max_len=max_len,
+                   page_size=kwargs.get("page_size")),
         res.bundle,
         command=command,
     )
@@ -371,7 +385,7 @@ def sweep_buckets(
                         command=command, cache=cache, **kwargs,
                     )
                     emit(
-                        f"{bucket_key(cfg, n_slots=n_slots, max_len=max_len)}"
+                        f"{bucket_key(cfg, n_slots=n_slots, max_len=max_len, page_size=kwargs.get('page_size'))}"
                         f": {res.bundle.total_size / 2**20:.3f} MiB unified "
                         f"({res.wall_s:.2f}s)"
                     )
@@ -416,6 +430,13 @@ def main() -> None:
                          "of greedy (joins the fingerprint)")
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="compile a PAGED bucket: carve slot state into "
+                         "fixed pages of this many bytes (joins the "
+                         "fingerprint and the bucket key)")
+    ap.add_argument("--page-pool", type=int, default=None,
+                    help="physical pool page count for --page-size "
+                         "(default: n_slots x pages-per-slot)")
     ap.add_argument("--no-lint", action="store_true",
                     help="skip the pre-publish static-analysis gate "
                          "(soundness certifier + bundle self-lint)")
@@ -443,6 +464,7 @@ def main() -> None:
             search_iters=args.iters, fusion_rounds=args.fusion_rounds,
             block_size=args.block_size, greedy=not args.sample,
             temperature=args.temperature, top_k=args.top_k,
+            page_size=args.page_size, page_pool=args.page_pool,
             lint=not args.no_lint, aot=not args.no_aot,
             command=command,
         )
@@ -463,18 +485,20 @@ def main() -> None:
         search_iters=args.iters, fusion_rounds=args.fusion_rounds,
         block_size=args.block_size, greedy=not args.sample,
         temperature=args.temperature, top_k=args.top_k,
+        page_size=args.page_size, page_pool=args.page_pool,
         lint=not args.no_lint, aot=not args.no_aot,
         command=command,
     )
     print(res.summary())
     print(f"published to {args.out}/ "
-          f"(bucket {bucket_key(cfg, n_slots=args.slots, max_len=args.max_len)})")
+          f"(bucket {bucket_key(cfg, n_slots=args.slots, max_len=args.max_len, page_size=args.page_size)})")
     if args.json:
         print(json.dumps({
             "arch": args.arch,
             "full": args.full,
             "n_slots": args.slots,
             "max_len": args.max_len,
+            "page_size": args.page_size,
             "greedy_total_bytes": res.greedy_plan.total_size,
             "bundle_total_bytes": res.bundle.plan.total_size,
             "state_total_bytes": (

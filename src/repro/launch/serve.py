@@ -41,7 +41,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import ARCH_IDS, get_config, get_reduced
-from repro.core.shared_objects import from_slot_log
+from repro.core.shared_objects import from_page_log, from_slot_log
 from repro.core.unified import PlanSession
 from repro.models.api import Model
 from repro.runtime.engine import InferenceEngine
@@ -69,6 +69,7 @@ def _time_to_first_token(cfg, params, args, session) -> tuple[float, int]:
         greedy=not args.sample, sample_seed=args.seed,
         temperature=args.temperature, top_k=args.top_k,
         eos_id=args.eos_id, block_size=args.block_size,
+        page_size=args.page_size, page_pool=args.page_pool,
     )
     engine.submit(prompt, max_new_tokens=max(args.block_size, 1))
     engine.run_until_done()
@@ -111,6 +112,13 @@ def run(argv: list[str] | None = None) -> dict:
                          "block path)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="retire a request when it emits this token")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="serve the PAGED state backend: per-slot page "
+                         "tables over a pool of fixed pages of this many "
+                         "bytes (joins the decode fingerprint)")
+    ap.add_argument("--page-pool", type=int, default=None,
+                    help="physical pool page count for --page-size "
+                         "(default: slots x pages-per-slot)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch) if args.full else get_reduced(args.arch)
@@ -128,6 +136,7 @@ def run(argv: list[str] | None = None) -> dict:
             command="launch/serve.py --compile-first",
             block_size=args.block_size, greedy=not args.sample,
             temperature=args.temperature, top_k=args.top_k,
+            page_size=args.page_size, page_pool=args.page_pool,
         )
         print(f"compiled plan bundle in {time.perf_counter() - t0:.2f}s: "
               f"{res.bundle.summary()}")
@@ -151,6 +160,7 @@ def run(argv: list[str] | None = None) -> dict:
         greedy=not args.sample, sample_seed=args.seed,
         temperature=args.temperature, top_k=args.top_k,
         eos_id=args.eos_id, block_size=args.block_size,
+        page_size=args.page_size, page_pool=args.page_pool,
     )
     cold_start_s = time.perf_counter() - t0
     report = engine.memory_report
@@ -223,6 +233,25 @@ def run(argv: list[str] | None = None) -> dict:
     print(f"slot log (slot, admitted, finished, rid): {engine.slot_log}")
     print(f"slot audit: {len(audit.assignment)} requests over "
           f"{engine.n_slots} slots, no interval overlap")
+    final_report = engine.memory_report
+    pages_total = final_report.state_pages_total
+    pages_live = final_report.state_pages_live
+    pages_peak = None
+    if getattr(engine.state, "paged", False):
+        sp = report.state_plan
+        pages_peak = engine.state.pages_live_peak
+        # page-reuse audit, one level below the slot audit: pool pages
+        # are the shared objects; raises if the runtime allocator ever
+        # double-assigned a live page
+        page_audit = from_page_log(engine.page_log, state_plan=sp)
+        print(f"paged state: pool {pages_total} x {sp.page_size} B pages "
+              f"(+1 null), peak live {pages_peak} "
+              f"({pages_peak * sp.page_size} B = "
+              f"{pages_peak / max(pages_total, 1):.0%} of the pool), "
+              f"live now {pages_live}")
+        print(f"page audit: {len(page_audit.assignment)} (request, page) "
+              f"residencies over {pages_total} pool pages, no interval "
+              f"overlap")
     return {
         "requests": len(done),
         "tokens": toks,
@@ -249,8 +278,13 @@ def run(argv: list[str] | None = None) -> dict:
         ),
         "unified_total_bytes": report.unified_total_bytes,
         "state_planned_bytes": report.state_planned_bytes,
-        "state_live_bytes": report.state_live_bytes,
+        "state_live_bytes": final_report.state_live_bytes,
         "state_residency": report.state_residency,
+        "page_size": final_report.state_page_size,
+        "state_pages_total": pages_total,
+        "state_pages_live": pages_live,
+        "state_pages_live_peak": pages_peak,
+        "page_log": list(engine.page_log),
         "requested_max_len": args.max_len,
         "effective_max_len": engine.max_len,
         "requested_slots": args.slots,

@@ -49,7 +49,16 @@ from repro.core.artifact import (
     executable_entry,
     expected_executable_entries,
 )
-from repro.core.unified import StatePlan
+from repro.core.unified import PagedStatePlan, StatePlan
+from repro.runtime.paging import (
+    PAGED_BLOCK_DONATE,
+    PAGED_DECODE_DONATE,
+    PAGED_RESET_DONATE,
+    PagedStateResidency,
+    paged_block_impl,
+    paged_decode_impl,
+    paged_reset_impl,
+)
 from repro.runtime.residency import (
     BLOCK_DONATE,
     DECODE_DONATE,
@@ -110,9 +119,20 @@ def build_decode_executables(
     model = Model.for_config(cfg)
     params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     caches = jax.eval_shape(lambda: model.init_cache(n_slots, max_len))
-    residency = StateResidency(state_plan, caches, n_slots=n_slots)
+    paged = isinstance(state_plan, PagedStatePlan)
+    if paged:
+        residency = PagedStateResidency(state_plan, caches, n_slots=n_slots)
+        buf = jax.ShapeDtypeStruct(
+            (state_plan.phys_total_size,), jnp.uint8
+        )
+        pages = jax.ShapeDtypeStruct(
+            (n_slots, state_plan.pages_per_slot), jnp.int32
+        )
+    else:
+        residency = StateResidency(state_plan, caches, n_slots=n_slots)
+        buf = jax.ShapeDtypeStruct((state_plan.total_size,), jnp.uint8)
+        pages = None
 
-    buf = jax.ShapeDtypeStruct((state_plan.total_size,), jnp.uint8)
     tok = jax.ShapeDtypeStruct((n_slots, 1), jnp.int32)
     vec_i32 = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
     vec_bool = jax.ShapeDtypeStruct((n_slots,), jnp.bool_)
@@ -135,18 +155,32 @@ def build_decode_executables(
     _compile(
         "pytree_reset", pytree_reset_impl(model), (caches, vec_bool)
     )
-    _compile(
-        "resident_decode",
-        resident_decode_impl(model, residency),
-        (params, tok, buf, vec_i32, vec_bool),
-        donate=DECODE_DONATE,
-    )
-    _compile(
-        "resident_reset",
-        resident_reset_impl(model, residency),
-        (buf, vec_bool),
-        donate=RESET_DONATE,
-    )
+    if paged:
+        _compile(
+            "paged_decode",
+            paged_decode_impl(model, residency),
+            (params, tok, buf, vec_i32, vec_bool, pages),
+            donate=PAGED_DECODE_DONATE,
+        )
+        _compile(
+            "paged_reset",
+            paged_reset_impl(model, residency),
+            (buf, vec_bool, pages),
+            donate=PAGED_RESET_DONATE,
+        )
+    else:
+        _compile(
+            "resident_decode",
+            resident_decode_impl(model, residency),
+            (params, tok, buf, vec_i32, vec_bool),
+            donate=DECODE_DONATE,
+        )
+        _compile(
+            "resident_reset",
+            resident_reset_impl(model, residency),
+            (buf, vec_bool),
+            donate=RESET_DONATE,
+        )
     if block_size > 1:
         sampler = TokenSampler(
             SamplingParams(
@@ -154,13 +188,22 @@ def build_decode_executables(
             ),
             max_len=max_len,
         )
-        _compile(
-            block_entry_name("resident", block_size),
-            resident_block_impl(model, residency, sampler, block_size),
-            (params, buf, tok, vec_i32, vec_bool, vec_bool, vec_i32, keys,
-             eos),
-            donate=BLOCK_DONATE,
-        )
+        if paged:
+            _compile(
+                block_entry_name("paged", block_size),
+                paged_block_impl(model, residency, sampler, block_size),
+                (params, buf, tok, vec_i32, vec_bool, vec_bool, vec_i32,
+                 keys, eos, pages),
+                donate=PAGED_BLOCK_DONATE,
+            )
+        else:
+            _compile(
+                block_entry_name("resident", block_size),
+                resident_block_impl(model, residency, sampler, block_size),
+                (params, buf, tok, vec_i32, vec_bool, vec_bool, vec_i32,
+                 keys, eos),
+                donate=BLOCK_DONATE,
+            )
         _compile(
             block_entry_name("pytree", block_size),
             pytree_block_impl(model, sampler, block_size),

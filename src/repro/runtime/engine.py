@@ -79,15 +79,23 @@ from repro.core.artifact import (
 from repro.core.graph import Graph
 from repro.core.planner import MemoryPlan, plan_graph
 from repro.core.unified import (
+    PagedStatePlan,
     PlanSession,
     PlanSpec,
     StatePlan,
     UnifiedPlan,
+    detect_state_axes,
+    plan_paged_state,
     plan_state,
     state_records_from_pytree,
 )
 from repro.models.api import Model
 from repro.runtime.arena import Arena
+from repro.runtime.paging import (
+    PagedOutOfPagesError,
+    PagedResidentState,
+    PagedStateResidency,
+)
 from repro.runtime.residency import (
     BlockOut,
     PytreeState,
@@ -174,6 +182,15 @@ class MemoryReport:
     # when a shipped pack was refused (platform/jax-version/integrity)
     aot_executables: list[str] = dataclasses.field(default_factory=list)
     aot_warning: str | None = None
+    # paged state accounting (None on the symmetric backend): pool size,
+    # pages currently held by ACTIVE slots, and the page size — under
+    # paging ``cache_bytes_per_slot`` above is the HONEST live-page
+    # bytes per active slot (pages_live * page_size / n_active), not
+    # the symmetric region size (``engine.memory_report`` refreshes the
+    # live fields on access)
+    state_pages_total: int | None = None
+    state_pages_live: int | None = None
+    state_page_size: int | None = None
 
     @property
     def state_planned_bytes(self) -> int | None:
@@ -215,8 +232,23 @@ class MemoryReport:
                 f"unified footprint (activation + state): "
                 f"{self.unified_total_bytes / 2**20:.3f} MiB"
             )
+        if self.state_pages_total is not None:
+            live = self.state_pages_live or 0
+            page = self.state_page_size or 0
+            lines.append(
+                f"paged state: {live}/{self.state_pages_total} pool pages "
+                f"live ({live * page / 2**20:.3f} MiB of "
+                f"{(self.state_planned_bytes or 0) / 2**20:.3f} MiB "
+                f"logical)"
+            )
         if self.state_live_bytes is not None:
-            if self.state_residency:
+            if self.state_residency and self.state_pages_total is not None:
+                lines.append(
+                    f"state residency: ON (paged) — live device state "
+                    f"{self.state_live_bytes / 2**20:.3f} MiB across "
+                    f"page-table-mapped pool pages"
+                )
+            elif self.state_residency:
                 lines.append(
                     f"state residency: ON — live device state "
                     f"{self.state_live_bytes / 2**20:.3f} MiB in one "
@@ -306,6 +338,12 @@ class InferenceEngine:
         # (numpy sampling, the oracle); K > 1 = lax.scan block decode
         # with on-device sampling + stop detection
         block_size: int = 1,
+        # paged state (None = symmetric max_len slot regions): fixed
+        # page size in bytes and pool size in pages (None = enough to
+        # map every slot fully); joins the serve fingerprint so paged
+        # and symmetric bundles for the same bucket never cross-match
+        page_size: int | None = None,
+        page_pool: int | None = None,
         # None -> the REPRO_STATE_RESIDENCY env knob (default: on)
         state_residency: bool | None = None,
         # certify the resolved unified plan at startup with the static
@@ -346,9 +384,14 @@ class InferenceEngine:
         # the part of the serve config that shapes the compiled graph —
         # joins the decode fingerprint so bundles self-invalidate across
         # serving configurations (None = default greedy host loop)
+        self.page_size = None if not page_size else int(page_size)
+        self.page_pool = None if page_pool is None else int(page_pool)
+        if self.page_size is not None and self.page_size <= 0:
+            raise ValueError(f"page_size must be positive, got {page_size}")
         self._serve_params = serve_fingerprint(
             block_size=self.block_size, greedy=greedy,
             temperature=self.temperature, top_k=self.top_k,
+            page_size=self.page_size, page_pool=self.page_pool,
         )
         # ONE engine-owned generator: a per-slot default_rng(self._wave)
         # gave every slot in a wave the same seed, so slots with identical
@@ -469,6 +512,19 @@ class InferenceEngine:
         # bundle path to zero work here too)
         if unified is not None and unified.state is not None:
             state_plan = unified.state
+        elif self.page_size:
+            state_plan = plan_paged_state(
+                state_records_from_pytree(cache_template, n_slots=n_slots),
+                n_slots=n_slots,
+                max_len=self.max_len,
+                page_size=self.page_size,
+                page_pool=self.page_pool,
+                axes=detect_state_axes(
+                    self.model.init_cache,
+                    n_slots=n_slots,
+                    max_len=self.max_len,
+                ),
+            )
         else:
             state_plan = plan_state(
                 state_records_from_pytree(cache_template, n_slots=n_slots),
@@ -532,19 +588,33 @@ class InferenceEngine:
         act_layout, self.state_layout = self.unified_plan.arena_layouts()
         self.activation_arena = Arena(act_layout)
         self.residency: StateResidency | None = None
+        paged_plan = isinstance(state_plan, PagedStatePlan)
         if residency_enabled(state_residency):
             try:
-                self.residency = StateResidency(
-                    state_plan, cache_template, n_slots=n_slots,
-                    layout=self.state_layout,
-                )
-                # zero-init straight into the flat buffer (init_cache's
-                # contract is all-zero state): on this path the engine
-                # NEVER materializes a cache pytree, so cold start holds
-                # exactly one state allocation, not pytree + arena
-                self.state = ResidentState(
-                    self.model, self.residency, executables=aot_execs
-                )
+                if paged_plan:
+                    # page-table addressing over the physical pool
+                    # buffer; page allocation bookkeeping lives in the
+                    # backend, driven by _admit / retirement below
+                    self.residency = PagedStateResidency(
+                        state_plan, cache_template, n_slots=n_slots,
+                        layout=self.state_layout,
+                    )
+                    self.state = PagedResidentState(
+                        self.model, self.residency, executables=aot_execs
+                    )
+                else:
+                    self.residency = StateResidency(
+                        state_plan, cache_template, n_slots=n_slots,
+                        layout=self.state_layout,
+                    )
+                    # zero-init straight into the flat buffer
+                    # (init_cache's contract is all-zero state): on this
+                    # path the engine NEVER materializes a cache pytree,
+                    # so cold start holds exactly one state allocation,
+                    # not pytree + arena
+                    self.state = ResidentState(
+                        self.model, self.residency, executables=aot_execs
+                    )
             except Exception as e:
                 # a state plan that cannot back this cache pytree must
                 # degrade to the XLA-allocated path, not kill serving
@@ -554,15 +624,28 @@ class InferenceEngine:
                 )
                 self.residency = None
         if self.residency is None:
+            if paged_plan:
+                # the pytree backend has no page indirection: tokens are
+                # identical (it is the differential oracle), but state
+                # stays symmetric and page accounting is unavailable
+                warnings.warn(
+                    "paged state requires state residency; serving the "
+                    "symmetric XLA-allocated pytree backend instead",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
             self.state = PytreeState(
                 self.model,
                 self.model.init_cache(n_slots, self.max_len),
                 executables=aot_execs,
             )
-        self.memory_report = MemoryReport(
+        paged_backend = bool(getattr(self.state, "paged", False))
+        self._memory_report = MemoryReport(
             activation_plan=plan,
             xla_temp_bytes=xla_temp,
-            cache_bytes_per_slot=state_plan.bytes_per_slot,
+            cache_bytes_per_slot=(
+                0 if paged_backend else state_plan.bytes_per_slot
+            ),
             n_slots=n_slots,
             plan_cache_hit=plan.cache_hit,
             plan_source=plan_source,
@@ -572,6 +655,13 @@ class InferenceEngine:
             state_live_bytes=self.state.live_bytes,
             aot_executables=sorted(aot_execs),
             aot_warning=aot_warning,
+            state_pages_total=(
+                self.state.pages_total if paged_backend else None
+            ),
+            state_pages_live=0 if paged_backend else None,
+            state_page_size=(
+                state_plan.page_size if paged_backend else None
+            ),
         )
 
         # serving state — per-slot positions (continuous batching: every
@@ -610,6 +700,33 @@ class InferenceEngine:
         only; the serving path never materializes this)."""
         return self.state.caches
 
+    @property
+    def memory_report(self) -> MemoryReport:
+        """The planned-vs-live report. Under paging the live fields are
+        refreshed on access — ``cache_bytes_per_slot`` is the HONEST
+        live-page bytes per active slot and ``state_pages_live`` /
+        ``state_live_bytes`` track the pool — so the report tells the
+        truth mid-serve, not just at construction."""
+        rep = self._memory_report
+        if not getattr(self.state, "paged", False):
+            return rep
+        return dataclasses.replace(
+            rep,
+            cache_bytes_per_slot=(
+                self.state.live_bytes // max(len(self._active), 1)
+            ),
+            state_pages_live=self.state.pages_live,
+            state_live_bytes=self.state.live_bytes,
+        )
+
+    @property
+    def page_log(self) -> list[tuple[int, int, int, int]]:
+        """Page occupancy intervals ``(page, admitted_wave,
+        finished_wave, request_id)`` — the page-granular twin of
+        ``slot_log`` (empty on non-paged backends), audited by
+        ``shared_objects.from_page_log``."""
+        return list(getattr(self.state, "page_log", []))
+
     def _step_tokens(self, tokens: np.ndarray, pos: np.ndarray,
                      active: np.ndarray):
         # jnp.array COPIES (jnp.asarray is zero-copy on CPU, and the engine
@@ -630,7 +747,31 @@ class InferenceEngine:
 
     def _admit(self) -> None:
         free = [s for s in range(self.n_slots) if s not in self._active]
+        paged = getattr(self.state, "paged", False)
         while free and self._queue:
+            if paged:
+                # allocate-before-admit: map the pages the head request
+                # needs (its cache never grows past prompt + budget,
+                # capped by the bucket length) BEFORE touching any slot
+                # state. A refused allocation mutates nothing: with
+                # active slots we stop admitting and retry after the
+                # next retirement returns pages (FIFO head-of-line, so
+                # the admission schedule stays deterministic); with NO
+                # active slots the whole pool is free, so the request
+                # can never fit this bucket and the error propagates.
+                req = self._queue[0]
+                needed = min(
+                    len(req.prompt) + req.max_new_tokens, self.max_len
+                )
+                try:
+                    self.state.allocate_slot(
+                        free[0], needed, rid=req.request_id,
+                        wave=self._wave,
+                    )
+                except PagedOutOfPagesError:
+                    if self._active:
+                        break
+                    raise
             slot = free.pop(0)
             req = self._queue.pop(0)
             req.admitted_wave = self._wave
@@ -699,6 +840,8 @@ class InferenceEngine:
                 )
                 finished.append(req)
                 del self._active[slot]
+                if getattr(self.state, "paged", False):
+                    self.state.free_slot(slot, self._wave)
         self._wave += 1
         return finished
 
@@ -817,6 +960,8 @@ class InferenceEngine:
                     )
                     finished.append(req)
                     del self._active[slot]
+                    if getattr(self.state, "paged", False):
+                        self.state.free_slot(slot, wave)
         self._wave = inflight.base_wave + inflight.length
         return finished
 

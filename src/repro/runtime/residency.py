@@ -241,7 +241,10 @@ class StateResidency:
                 host.store(
                     view.tensor_id, np.take(arr, view.slot, axis=axis)
                 )
-        return jax.device_put(host.buf)
+        # jnp.array COPIES into a device-owned buffer: device_put of the
+        # host arena can zero-copy alias numpy memory on CPU, which is
+        # unsafe to donate through the decode jits
+        return jnp.array(host.buf)
 
     def unpack(self, buf) -> Any:
         """The cache pytree as views over ``buf`` — every leaf rebuilt

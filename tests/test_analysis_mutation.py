@@ -192,3 +192,75 @@ def test_shrunk_state_leaf_is_caught():
     assert "state-leaf-size" in _error_codes(
         soundness.certify_state_plan(mutated)
     )
+
+
+# ------------------------------------------------- paged-plan mutations
+
+
+def _paged_plan(page_size=64, page_pool=None):
+    from repro.core.unified import StateRecord, plan_paged_state
+
+    n_slots = 2
+    records = [
+        StateRecord(path="kv", shape=(n_slots, 16, 8), dtype="float32",
+                    nbytes=n_slots * 16 * 8 * 4),
+        StateRecord(path="ssm", shape=(n_slots, 24), dtype="float32",
+                    nbytes=n_slots * 24 * 4),
+    ]
+    return plan_paged_state(
+        records, n_slots=n_slots, max_len=16, page_size=page_size,
+        page_pool=page_pool, axes={"kv": (0, 1), "ssm": (0, None)},
+    )
+
+
+def test_paged_pristine_certifies_clean():
+    for page in (64, 100, 4096):
+        assert not soundness.certify_state_plan(_paged_plan(page))
+
+
+@pytest.mark.parametrize(
+    "mutate,code",
+    [
+        # pile pool page 1 onto page 0's bytes
+        (lambda sp: {"page_offsets": [sp.page_offsets[0]]
+                     + sp.page_offsets[1:-1] + [sp.page_offsets[0]]},
+         "paged-page-collision"),
+        # steal the reserved null page at physical offset 0
+        (lambda sp: {"page_offsets": [0] + sp.page_offsets[1:]},
+         "paged-page-collision"),
+        # knock a page off its alignment
+        (lambda sp: {"page_offsets": [sp.page_offsets[0] + 1]
+                     + sp.page_offsets[1:]},
+         "paged-page-unaligned"),
+        # push the last page past the physical end of the pool buffer
+        (lambda sp: {"page_offsets": sp.page_offsets[:-1]
+                     + [sp.phys_total_size]},
+         "paged-page-spill"),
+        # drop a token span: leaves and spans fall out of step
+        (lambda sp: {"token_spans": sp.token_spans[:-1]},
+         "paged-span-size"),
+        # shrink a span's row count: it no longer covers the leaf payload
+        (lambda sp: {"token_spans": [(1, 8, 32)] + sp.token_spans[1:]},
+         "paged-span-size"),
+        # declare an empty pool
+        (lambda sp: {"n_pages_pool": 0, "page_offsets": []},
+         "paged-pool-empty"),
+        (lambda sp: {"page_size": 0}, "paged-page-size"),
+    ],
+)
+def test_paged_mutation_is_caught(mutate, code):
+    import dataclasses
+
+    sp = _paged_plan()
+    mutated = dataclasses.replace(sp, **mutate(sp))
+    codes = _error_codes(soundness.certify_state_plan(mutated))
+    assert code in codes, codes
+
+
+def test_paged_pool_too_small_for_one_slot_warns():
+    sp = _paged_plan(page_pool=2)  # pages_per_slot is far above 2
+    findings = soundness.certify_state_plan(sp)
+    assert not _error_codes(findings), "a short pool is legal, not unsound"
+    assert "paged-pool-short" in {
+        f.code for f in findings if f.severity == "warning"
+    }
