@@ -1,4 +1,5 @@
-"""Planner runtime scaling: fast interval-set engine vs the frozen oracle.
+"""Planner runtime scaling: fast interval-set engine vs the frozen oracle,
+plus full-scale real-config planning.
 
 The paper discusses O(k·n²) vs O(k·n·log n); this benchmark makes the gap
 a tracked number. For growing synthetic graphs it times each strategy on
@@ -6,10 +7,19 @@ both implementations, asserts their totals agree (a last-ditch
 differential check at sizes the test harness doesn't reach), and writes a
 JSON trajectory (``BENCH_planner.json``) consumed by scripts/ci.sh.
 
+A second section plans *real* decode graphs for the full-scale configs
+(gemma3-27b, llama4-maverick-400b-a17b, nemotron-4-340b) end to end:
+trace → portfolio plan → soundness certification → searched strategies
+(order annealing and fusion descent), with wall-clock, arena footprint,
+and a per-config time-budget column. Fusion search is the expensive leg
+(each round re-plans every adjacent merge), so ``--quick`` caps it to
+graphs small enough for CI and logs exactly what it dropped.
+
 Usage:
     PYTHONPATH=src python benchmarks/planner_scaling.py --quick \
         --out BENCH_planner.json
     PYTHONPATH=src python benchmarks/planner_scaling.py --sizes 100 1000
+    PYTHONPATH=src python benchmarks/planner_scaling.py --no-full-scale
 
 The oracle is skipped above ``--oracle-max-n`` (it is quadratic by
 design); fast-path timings keep scaling beyond it.
@@ -26,13 +36,32 @@ from repro.core import baselines, offsets, reference, shared_objects
 from repro.core.records import TensorUsageRecord
 
 STRATEGY_PAIRS = (
-    # (name, fast fn, oracle fn)
+    # (name, fast fn, oracle fn, oracle cap) — the cap bounds the sizes
+    # where the frozen oracle still runs (None defers to --oracle-max-n).
+    # The improved oracle re-scans every (tensor, object) pair per stage,
+    # so it blows past the generic cutoff long before the others (~25 s
+    # at n=2000 already); the heap fast path keeps scaling regardless.
     ("shared_objects/greedy_by_size",
-     shared_objects.greedy_by_size, reference.greedy_by_size),
+     shared_objects.greedy_by_size, reference.greedy_by_size, None),
+    ("shared_objects/greedy_by_size_improved",
+     shared_objects.greedy_by_size_improved,
+     reference.greedy_by_size_improved, 2000),
     ("offsets/greedy_by_size",
-     offsets.greedy_by_size_offsets, reference.greedy_by_size_offsets),
+     offsets.greedy_by_size_offsets, reference.greedy_by_size_offsets,
+     None),
     ("offsets/strip_packing_bestfit",
-     baselines.strip_packing_bestfit, reference.strip_packing_bestfit),
+     baselines.strip_packing_bestfit, reference.strip_packing_bestfit,
+     None),
+)
+
+# (arch, n_slots, max_len, budget_s) — budget_s bounds the whole
+# per-config pipeline (trace + plan + certify + both searches) and is
+# reported alongside the measured wall so regressions show as a flipped
+# ``within_budget`` bit, not just a bigger number.
+FULL_SCALE = (
+    ("gemma3-27b", 8, 2048, 180.0),
+    ("llama4-maverick-400b-a17b", 8, 2048, 60.0),
+    ("nemotron-4-340b", 8, 2048, 30.0),
 )
 
 
@@ -59,7 +88,7 @@ def bench(sizes, *, oracle_max_n: int = 5000, emit=print) -> dict:
     rows = []
     for n in sizes:
         recs = synth_records(n)
-        for name, fast_fn, oracle_fn in STRATEGY_PAIRS:
+        for name, fast_fn, oracle_fn, oracle_cap in STRATEGY_PAIRS:
             fast_s, fast_total = _time(fast_fn, recs)
             row = {
                 "n": n,
@@ -67,7 +96,7 @@ def bench(sizes, *, oracle_max_n: int = 5000, emit=print) -> dict:
                 "fast_s": round(fast_s, 6),
                 "total_size": fast_total,
             }
-            if n <= oracle_max_n:
+            if n <= min(oracle_max_n, oracle_cap or oracle_max_n):
                 oracle_s, oracle_total = _time(oracle_fn, recs)
                 if oracle_total != fast_total:
                     raise AssertionError(
@@ -90,6 +119,114 @@ def bench(sizes, *, oracle_max_n: int = 5000, emit=print) -> dict:
     return {"bench": "planner_scaling", "rows": rows}
 
 
+def bench_full_scale(
+    configs=FULL_SCALE,
+    *,
+    search_iters: int = 300,
+    fusion_ops_cap: int | None = None,
+    emit=print,
+) -> list[dict]:
+    """Plan real decode graphs end to end and time the searched
+    strategies too. Every plan (baseline, order-searched, fused) is
+    certified with the soundness pass — a bench row for an unsound plan
+    is worse than no row.
+
+    ``fusion_ops_cap`` skips fusion search on graphs with more ops than
+    the cap (it re-plans every adjacent merge each round, ~1 min/round at
+    ~1.5k ops); skips are logged and recorded as ``null`` columns, never
+    silently dropped.
+    """
+    from repro.analysis import soundness
+    from repro.configs.base import get_config
+    from repro.core.fusion_search import fusion_search
+    from repro.core.order_search import search_order
+    from repro.core.planner import plan_graph
+    from repro.launch.compile import trace_decode_graph
+
+    def certify(plan, label: str) -> None:
+        findings = soundness.certify_plan(plan, label=label)
+        errors = [f for f in findings if f.severity == "error"]
+        if errors:
+            raise AssertionError(
+                f"{label}: plan failed soundness certification: "
+                + "; ".join(f.message for f in errors)
+            )
+
+    rows = []
+    for arch, n_slots, max_len, budget_s in configs:
+        wall0 = time.perf_counter()
+        cfg = get_config(arch)
+
+        t0 = time.perf_counter()
+        graph = trace_decode_graph(cfg, n_slots=n_slots, max_len=max_len)
+        trace_s = time.perf_counter() - t0
+        n_records = len(graph.usage_records())
+
+        t0 = time.perf_counter()
+        plan = plan_graph(graph)
+        plan_s = time.perf_counter() - t0
+        certify(plan, f"{arch}-decode[{plan.strategy}]")
+
+        t0 = time.perf_counter()
+        order = search_order(graph, iters=search_iters)
+        order_s = time.perf_counter() - t0
+        certify(order.plan, f"{arch}-decode[order_search]")
+
+        row = {
+            "arch": arch,
+            "n_slots": n_slots,
+            "max_len": max_len,
+            "n_ops": len(graph.ops),
+            "n_records": n_records,
+            "trace_s": round(trace_s, 3),
+            "plan_s": round(plan_s, 3),
+            "strategy": plan.strategy,
+            "total_size": plan.total_size,
+            "lower_bound": plan.lower_bound,
+            "order_search_s": round(order_s, 3),
+            "order_search_total": order.plan.total_size,
+            "order_search_evals": order.evaluations,
+        }
+
+        if fusion_ops_cap is not None and len(graph.ops) > fusion_ops_cap:
+            emit(
+                f"{arch}: fusion search skipped "
+                f"({len(graph.ops)} ops > cap {fusion_ops_cap}; run "
+                f"without --quick for the full sweep)"
+            )
+            row["fusion_search_s"] = None
+            row["fusion_search_total"] = None
+        else:
+            t0 = time.perf_counter()
+            fused = fusion_search(graph, max_rounds=1)
+            fusion_s = time.perf_counter() - t0
+            certify(fused.plan, f"{arch}-decode[fusion_search]")
+            row["fusion_search_s"] = round(fusion_s, 3)
+            row["fusion_search_total"] = fused.plan.total_size
+            row["fusion_search_evals"] = fused.evaluations
+
+        wall_s = time.perf_counter() - wall0
+        row["budget_s"] = budget_s
+        row["wall_s"] = round(wall_s, 3)
+        row["within_budget"] = wall_s <= budget_s
+        rows.append(row)
+        emit(
+            f"{arch} slots={n_slots} len={max_len}: "
+            f"{row['n_ops']} ops / {n_records} records, "
+            f"plan {plan_s * 1e3:.0f} ms → "
+            f"{plan.total_size / 2**20:.1f} MiB [{plan.strategy}], "
+            f"order {order_s:.1f}s"
+            + (
+                f", fusion {row['fusion_search_s']}s"
+                if row["fusion_search_s"] is not None
+                else ""
+            )
+            + f"; wall {wall_s:.1f}s / budget {budget_s:.0f}s "
+            f"({'OK' if row['within_budget'] else 'OVER'}), certified"
+        )
+    return rows
+
+
 def run(emit=print) -> None:
     """Back-compat entry for benchmarks/run.py: small fast-only sweep in
     the historical ``name,us_per_call,derived`` CSV shape."""
@@ -107,14 +244,25 @@ def run(emit=print) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="CI sweep: n in (500, 2000, 5000)")
+                    help="CI sweep: n in (500, 2000, 5000); fusion "
+                         "search capped to graphs <= 512 ops")
     ap.add_argument("--sizes", type=int, nargs="*", default=None)
     ap.add_argument("--oracle-max-n", type=int, default=5000)
+    ap.add_argument("--no-full-scale", action="store_true",
+                    help="skip the real-config planning section")
+    ap.add_argument("--search-iters", type=int, default=None,
+                    help="order-search annealing iterations per config")
     ap.add_argument("--out", default=None, help="write JSON results here")
     args = ap.parse_args()
     sizes = args.sizes or ((500, 2000, 5000) if args.quick
                            else (100, 300, 1000, 3000, 5000, 10000))
     result = bench(sizes, oracle_max_n=args.oracle_max_n)
+    if not args.no_full_scale:
+        result["full_scale"] = bench_full_scale(
+            search_iters=args.search_iters
+            or (100 if args.quick else 300),
+            fusion_ops_cap=512 if args.quick else None,
+        )
     if args.out:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)

@@ -247,6 +247,90 @@ print(f"paged serve: --strict lint clean, zero traces/plans/compiles, "
       f"{peak} pages < symmetric footprint, tokens identical")
 PY
 
+# planner scaling smoke: the full portfolio legs must plan a 50k-record
+# graph inside a hard wall-clock ceiling (the pre-heap greedy-by-size
+# -improved took ~67 s here; the pre-vectorized arena minutes), and the
+# resulting plan must pass the soundness certifier — fast AND sound, not
+# fast instead of sound.
+python - <<'PY'
+import sys
+import time
+sys.path.insert(0, "benchmarks")
+from planner_scaling import synth_records
+from repro.analysis import soundness
+from repro.core.planner import plan_records
+
+recs = synth_records(50_000)
+t0 = time.perf_counter()
+plan = plan_records(recs, mode="offsets", strategy="greedy_by_size",
+                    graph_name="ci-smoke-50k")
+improved = plan_records(recs, mode="shared_objects",
+                        strategy="greedy_by_size_improved",
+                        graph_name="ci-smoke-50k")
+wall = time.perf_counter() - t0
+CEILING_S = 30.0
+assert wall < CEILING_S, (
+    f"50k-record planning took {wall:.1f}s >= {CEILING_S}s ceiling — "
+    "a fast path regressed to quadratic"
+)
+for p in (plan, improved):
+    errors = [f for f in soundness.certify_plan(p) if f.severity == "error"]
+    assert not errors, f"{p.strategy}: {[f.message for f in errors]}"
+print(f"planner smoke: 50k records planned in {wall:.1f}s "
+      f"(< {CEILING_S:.0f}s ceiling), offsets {plan.total_size} B / "
+      f"shared-objects {improved.total_size} B, both certified sound")
+PY
+
+# prefill+decode round trip: a --prefill-len bucket compiles through the
+# same pre-publish gate into a v4 bundle that carries a PLANNED prefill
+# activation arena (certified by the --strict lint baseline alongside the
+# decode plan), keys its bucket with the |pfN suffix, and still serves
+# decode requests with zero traces / plans / state layouts / XLA
+# compiles — prefill metadata is inert extra planning, never a serving
+# cost.
+python - <<'PY'
+import json
+import pathlib
+import sys
+import tempfile
+from repro.analysis import counters
+from repro.analysis.lint import main as lint_main
+from repro.core import artifact
+from repro.launch import serve
+from repro.launch.compile import main as compile_main
+
+with tempfile.TemporaryDirectory() as d:
+    sys.argv = ["compile", "--arch", "qwen3-0.6b", "--slots", "2",
+                "--max-len", "64", "--prefill-len", "32", "--out", d]
+    compile_main()
+    rc = lint_main(["--strict", "bundles", d])
+    assert rc == 0, f"prefill bundle failed the --strict lint baseline ({rc})"
+    manifest = json.loads((pathlib.Path(d) / "manifest.json").read_text())
+    keys = list(manifest["buckets"])
+    assert any(k.endswith("|pf32") for k in keys), keys
+    bundle = artifact.load_bundle(
+        pathlib.Path(d) / manifest["buckets"][keys[0]]["file"])
+    assert bundle.prefill_len == 32 and bundle.prefill_plan is not None, (
+        bundle.summary()
+    )
+    assert bundle.peak_activation_size >= bundle.plan.total_size
+    with counters.capture(
+        "trace_calls", "plan_calls", "state_plan_calls", "compile_calls"
+    ) as cap:
+        stats = serve.run(["--arch", "qwen3-0.6b", "--requests", "2",
+                           "--prompt-len", "3", "--max-new", "2",
+                           "--slots", "2", "--max-len", "64",
+                           "--plan-bundle", d])
+    assert stats["plan_source"] == "bundle", stats["bundle_warning"]
+    for c in ("trace_calls", "plan_calls", "state_plan_calls",
+              "compile_calls"):
+        assert cap.delta(c) == 0, f"prefill bundle serve paid {c}"
+    assert stats["tokens"] == 4
+print("prefill round trip: --prefill-len 32 bundle lints clean (strict), "
+      "bucket keyed |pf32, planned prefill arena on board, decode serve "
+      "zero traces/plans/state layouts/compiles")
+PY
+
 if [[ -z "${SKIP_BENCH:-}" ]]; then
     python benchmarks/planner_scaling.py --quick --out BENCH_planner.json
     # order/fusion search smoke: asserts footprint <= baseline on every

@@ -109,6 +109,7 @@ def lint_bundle(
             n_slots=bundle.n_slots,
             max_len=bundle.max_len,
             serve_params=serve_params,
+            prefill_len=bundle.prefill_len or None,
         )
         == bundle.fingerprint
         for cfg in candidates
@@ -165,6 +166,21 @@ def lint_bundle(
                 f"serve config says page_size={serve_page}, state plan "
                 f"carries page_size={plan_page} — a paged engine "
                 f"resolving this bucket would bind the wrong backend",
+                where,
+            )
+        )
+
+    # v4 prefill coherence: the bucket's prefill_len and the carried
+    # prefill plan must agree — a plan without its length (or vice versa)
+    # means the fingerprint and the bucket key disagree about what was
+    # compiled
+    if bool(bundle.prefill_len) != (bundle.prefill_plan is not None):
+        findings.append(
+            _finding(
+                "prefill-meta-mismatch",
+                f"bundle says prefill_len={bundle.prefill_len} but "
+                f"{'carries no' if bundle.prefill_plan is None else 'carries a'} "
+                f"prefill plan — prefill metadata and payload disagree",
                 where,
             )
         )
@@ -260,6 +276,17 @@ def lint_bundle_file(path: str | Path, *, label: str = "") -> list[Finding]:
                 severity="warning",
             )
         ]
+    elif version == 3:
+        findings = [
+            _finding(
+                "format-drift",
+                "format v3 document (no planned prefill arena) — still "
+                "serves with zero compiles; recompile with --prefill-len "
+                "to carry the full-sequence prefill plan",
+                where,
+                severity="warning",
+            )
+        ]
     elif version != BUNDLE_FORMAT_VERSION:
         return [
             _finding(
@@ -309,11 +336,11 @@ def _coverage_gaps(keys: list[str]) -> list[Finding]:
         got = parse_bucket_key(key)
         if got is None:
             continue
-        # paged and symmetric buckets are separate families: their grids
-        # are swept (and served) independently
+        # paged/symmetric and prefill/decode-only buckets are separate
+        # families: their grids are swept (and served) independently
         fam = (
             got["arch"], got["n_layers"], got["d_model"], got["dtype"],
-            got.get("page_size"),
+            got.get("page_size"), got.get("prefill_len"),
         )
         families.setdefault(fam, set()).add((got["n_slots"], got["max_len"]))
     findings = []

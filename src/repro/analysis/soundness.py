@@ -49,6 +49,21 @@ if TYPE_CHECKING:  # structural types only; no planner code is executed
 PASS = "soundness"
 
 
+def _leaf_nbytes(leaf) -> int:
+    """Byte size of one state-plan leaf. JSON round-tripped plans carry
+    dtype NAMES, and plain numpy does not know the ml_dtypes families
+    (``bfloat16``, ``float8_*``) the full-scale configs run in."""
+    import numpy as np
+
+    try:
+        itemsize = np.dtype(leaf.dtype).itemsize
+    except TypeError:
+        import ml_dtypes
+
+        itemsize = np.dtype(getattr(ml_dtypes, str(leaf.dtype))).itemsize
+    return math.prod(leaf.shape) * itemsize
+
+
 def _finding(code: str, message: str, where: str = "") -> Finding:
     return Finding(pass_name=PASS, code=code, message=message, where=where)
 
@@ -365,7 +380,7 @@ def certify_state_plan(
     spans: list[tuple[int, int, str]] = []
     for leaf in sp.leaves:
         where = f"{label}:{leaf.path}"
-        nbytes = math.prod(leaf.shape) * np.dtype(leaf.dtype).itemsize
+        nbytes = _leaf_nbytes(leaf)
         if nbytes % sp.n_slots:
             findings.append(
                 _finding(
@@ -523,7 +538,7 @@ def _certify_paged_state(sp, *, label: str) -> list[Finding]:
         if span is None:
             continue
         where = f"{label}:{leaf.path}"
-        nbytes = math.prod(leaf.shape) * np.dtype(leaf.dtype).itemsize
+        nbytes = _leaf_nbytes(leaf)
         if nbytes % max(sp.n_slots, 1):
             continue  # already reported as state-indivisible
         n_chunks, n_rows, row_nbytes = span
@@ -560,21 +575,24 @@ def certify_plan(plan: "MemoryPlan", *, label: str | None = None) -> list[Findin
 def certify_unified(
     up: "UnifiedPlan", *, label: str = "unified"
 ) -> list[Finding]:
-    """Certify both halves of a :class:`UnifiedPlan`."""
+    """Certify every half of a :class:`UnifiedPlan` (activation, state,
+    and — when planned — the prefill activation arena)."""
     findings: list[Finding] = []
     if up.activation is not None:
         findings += certify_plan(up.activation, label=f"{label}:activation")
     if up.state is not None:
         findings += certify_state_plan(up.state, label=f"{label}:state")
+    if up.prefill is not None:
+        findings += certify_plan(up.prefill, label=f"{label}:prefill")
     return findings
 
 
 def certify_bundle(
     bundle: "PlanBundle", *, label: str | None = None
 ) -> list[Finding]:
-    """Certify a published :class:`PlanBundle`: its activation plan and
-    (v2) its state plan. Manifest-level coherence is
-    :mod:`repro.analysis.bundle_lint`'s job."""
+    """Certify a published :class:`PlanBundle`: its activation plan,
+    (v2) its state plan, and (v4) its prefill plan. Manifest-level
+    coherence is :mod:`repro.analysis.bundle_lint`'s job."""
     where = label or (
         f"{bundle.arch}|slots{bundle.n_slots}|len{bundle.max_len}"
     )
@@ -582,6 +600,10 @@ def certify_bundle(
     if bundle.state_plan is not None:
         findings += certify_state_plan(
             bundle.state_plan, label=f"{where}:state"
+        )
+    if bundle.prefill_plan is not None:
+        findings += certify_plan(
+            bundle.prefill_plan, label=f"{where}:prefill"
         )
     return findings
 

@@ -77,7 +77,10 @@ if TYPE_CHECKING:  # keep this module importable without jax
 # files alone)
 # v3: + executables (AOT-serialized decode step/reset/block, platform +
 # jax-version keyed — zero XLA compiles on the serving path)
-BUNDLE_FORMAT_VERSION = 3
+# v4: + prefill_plan/prefill_len (the planned prefill activation arena —
+# long-lifetime full-sequence regime — compiled alongside the decode
+# plan; the prefill shape joins the fingerprint and the bucket key)
+BUNDLE_FORMAT_VERSION = 4
 
 # What ``decode_fingerprint`` hashes is versioned SEPARATELY from the
 # bundle container: the v2->v3 rev only ADDS the executable payload (the
@@ -157,6 +160,7 @@ def decode_fingerprint(
     n_slots: int,
     max_len: int,
     serve_params: "dict | None" = None,
+    prefill_len: "int | None" = None,
 ) -> str:
     """Hash of everything that shapes the decode-step graph, computable in
     microseconds — no trace, no planner. Covers the full architecture
@@ -165,7 +169,9 @@ def decode_fingerprint(
     pipeline/planner revisions, and — when the serving loop deviates from
     the default greedy host loop — the :func:`serve_fingerprint` payload
     (block size + sampling knobs), so bundles compiled for one serving
-    configuration self-invalidate under another."""
+    configuration self-invalidate under another. ``prefill_len`` joins
+    only when set (same None-canonicalization as ``serve_params``), so
+    every decode-only bundle and engine expectation is byte-unchanged."""
     cfg_obj = dataclasses.asdict(cfg)
     cfg_obj.pop("source", None)
     payload = {
@@ -178,6 +184,8 @@ def decode_fingerprint(
     }
     if serve_params:
         payload["serve_params"] = serve_params
+    if prefill_len:
+        payload["prefill_len"] = int(prefill_len)
     return _sha(payload)
 
 
@@ -202,42 +210,47 @@ def graph_fingerprint(graph: "Graph") -> str:
 def bucket_key(
     cfg: "ArchConfig", *, n_slots: int, max_len: int,
     page_size: "int | None" = None,
+    prefill_len: "int | None" = None,
 ) -> str:
     """Human-readable manifest index for an (arch, n_slots, max_len, dtype
-    [, page_size]) serving bucket. Layer count / width distinguish full
-    configs from their ``reduced()`` variants, which share ``cfg.name``;
-    paged buckets carry a ``|page{P}`` suffix so a paged and a symmetric
-    compile of the same shape coexist in one manifest. The fingerprint
-    (stored alongside) remains the actual correctness guard."""
+    [, page_size][, prefill_len]) serving bucket. Layer count / width
+    distinguish full configs from their ``reduced()`` variants, which
+    share ``cfg.name``; paged buckets carry a ``|page{P}`` suffix so a
+    paged and a symmetric compile of the same shape coexist in one
+    manifest; prefill-carrying buckets add ``|pf{S}`` (the planned prefill
+    sequence length). The fingerprint (stored alongside) remains the
+    actual correctness guard."""
     key = (
         f"{cfg.name}|L{cfg.n_layers}|d{cfg.d_model}"
         f"|slots{n_slots}|len{max_len}|{cfg.dtype}"
     )
     if page_size:
         key += f"|page{int(page_size)}"
+    if prefill_len:
+        key += f"|pf{int(prefill_len)}"
     return key
 
 
 _BUCKET_KEY_RE = re.compile(
     r"(?P<arch>.+)\|L(?P<n_layers>\d+)\|d(?P<d_model>\d+)"
     r"\|slots(?P<n_slots>\d+)\|len(?P<max_len>\d+)\|(?P<dtype>[^|]+?)"
-    r"(\|page(?P<page_size>\d+))?"
+    r"(\|page(?P<page_size>\d+))?(\|pf(?P<prefill_len>\d+))?"
 )
 
 
 def parse_bucket_key(key: str) -> dict | None:
     """Inverse of :func:`bucket_key`: the structured bucket, or None for a
     foreign/hand-made key (bucket auto-selection skips those).
-    ``page_size`` is None for symmetric buckets."""
+    ``page_size`` is None for symmetric buckets; ``prefill_len`` is None
+    for decode-only buckets."""
     m = _BUCKET_KEY_RE.fullmatch(key)
     if m is None:
         return None
     out: dict[str, Any] = m.groupdict()
     for field in ("n_layers", "d_model", "n_slots", "max_len"):
         out[field] = int(out[field])
-    out["page_size"] = (
-        int(out["page_size"]) if out["page_size"] is not None else None
-    )
+    for field in ("page_size", "prefill_len"):
+        out[field] = int(out[field]) if out[field] is not None else None
     return out
 
 
@@ -254,6 +267,8 @@ def bundle_bucket_key(bundle: PlanBundle) -> str | None:
     page_size = getattr(bundle.state_plan, "page_size", None)
     if page_size:
         key += f"|page{int(page_size)}"
+    if bundle.prefill_len:
+        key += f"|pf{int(bundle.prefill_len)}"
     return key
 
 
@@ -395,13 +410,32 @@ class PlanBundle:
     # v3: AOT-serialized decode executables — None in v1/v2-shim bundles
     # and under ``compile.py --no-aot`` (the engine lazy-compiles)
     executables: ExecutablePack | None = None
+    # v4: the planned prefill activation arena (full-sequence forward at
+    # ``prefill_len`` tokens — the long-lifetime regime) — None in
+    # v1/v2/v3-shim bundles and decode-only compiles (prefill_len 0)
+    prefill_plan: "MemoryPlan | None" = None
+    prefill_len: int = 0
 
     @property
     def total_size(self) -> int:
-        """Unified footprint: activation arena + cross-step state."""
+        """Unified footprint: activation arena + cross-step state. The
+        prefill arena is NOT summed in — prefill and decode never run
+        concurrently in one slot's lifetime, so the prefill arena aliases
+        the decode arena's address space (the peak activation demand is
+        ``max(plan, prefill_plan)``, see :attr:`peak_activation_size`)."""
         return self.plan.total_size + (
             self.state_plan.total_size if self.state_plan is not None else 0
         )
+
+    @property
+    def peak_activation_size(self) -> int:
+        """Peak transient-arena demand across both phases: the decode-step
+        arena and (when planned) the prefill arena, whichever is larger."""
+        prefill = (
+            self.prefill_plan.total_size
+            if self.prefill_plan is not None else 0
+        )
+        return max(self.plan.total_size, prefill)
 
     def summary(self) -> str:
         searched = self.provenance.get("searched_total_bytes")
@@ -425,10 +459,17 @@ class PlanBundle:
                 f"({self.executables.nbytes / 2**20:.3f} MiB, "
                 f"{self.executables.platform})"
             )
+        prefill = ""
+        if self.prefill_plan is not None:
+            prefill = (
+                f" + prefill[{self.prefill_len}] "
+                f"{self.prefill_plan.total_size / 2**20:.3f} MiB "
+                f"[{self.prefill_plan.strategy}]"
+            )
         return (
             f"bundle {self.arch} slots={self.n_slots} len={self.max_len} "
             f"{self.dtype}: {self.plan.total_size / 2**20:.3f} MiB "
-            f"[{self.plan.strategy}]{extra}{state}{aot}"
+            f"[{self.plan.strategy}]{extra}{state}{prefill}{aot}"
         )
 
 
@@ -439,6 +480,7 @@ def unified_from_bundle(bundle: PlanBundle) -> UnifiedPlan:
     return UnifiedPlan(
         activation=bundle.plan,
         state=bundle.state_plan,
+        prefill=bundle.prefill_plan,
         fingerprint=bundle.fingerprint,
         order=bundle.order,
         fusion_groups=bundle.fusion_groups,
@@ -472,6 +514,14 @@ def bundle_to_obj(bundle: PlanBundle) -> dict:
             if bundle.executables is not None
             else None
         ),
+        "prefill_len": bundle.prefill_len,
+        "prefill_plan": (
+            plan_io.plan_to_obj(
+                dataclasses.replace(bundle.prefill_plan, plan_wall_s=0.0)
+            )
+            if bundle.prefill_plan is not None
+            else None
+        ),
     }
 
 
@@ -501,8 +551,22 @@ def bundle_from_obj(obj: dict) -> PlanBundle:
         # degrades to lazy-compiling the decode jits.
         warnings.warn(
             "loading plan-bundle format v2 (no AOT decode executables); "
-            "recompile with launch/compile.py for a v3 bundle that "
+            "recompile with launch/compile.py for a v4 bundle that "
             "serves with zero XLA compiles",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+    elif version == 3:
+        # v3 shim: decode plans + executables but no prefill plan. The
+        # fingerprint schema is unchanged across v3->v4 (prefill_len is
+        # None-canonicalized out of decode-only fingerprints), so the
+        # bundle still matches its bucket and serves with zero compiles
+        # — it just carries no planned prefill arena. A warning, never a
+        # refusal.
+        warnings.warn(
+            "loading plan-bundle format v3 (no planned prefill arena); "
+            "recompile with launch/compile.py --prefill-len for a v4 "
+            "bundle that carries the full-sequence prefill plan",
             DeprecationWarning,
             stacklevel=2,
         )
@@ -513,6 +577,7 @@ def bundle_from_obj(obj: dict) -> PlanBundle:
         )
     state_obj = obj.get("state_plan")
     exec_obj = obj.get("executables")
+    prefill_obj = obj.get("prefill_plan")
     return PlanBundle(
         fingerprint=obj["fingerprint"],
         graph_fingerprint=obj["graph_fingerprint"],
@@ -528,6 +593,8 @@ def bundle_from_obj(obj: dict) -> PlanBundle:
         n_layers=obj.get("n_layers", 0),
         d_model=obj.get("d_model", 0),
         executables=executables_from_obj(exec_obj) if exec_obj else None,
+        prefill_plan=plan_io.plan_from_obj(prefill_obj) if prefill_obj else None,
+        prefill_len=obj.get("prefill_len", 0) or 0,
     )
 
 
@@ -816,9 +883,12 @@ class BundleManifest:
         request) AND ``n_slots >= requested`` (slots are the §4 shared
         objects — a bigger pool is admissible, just wasteful); paged and
         symmetric buckets are distinct families and never substitute for
-        each other. Ties break on the smallest unified footprint
-        (activation + state), then the smallest (max_len, n_slots) for
-        determinism. None when no admissible bucket exists."""
+        each other, while a prefill-carrying bucket (``|pf{S}``) IS
+        admissible for a decode-only request — the extra prefill plan is
+        inert metadata on the decode path. Ties break on the smallest
+        unified footprint (activation + state), then the smallest
+        (max_len, n_slots, prefill_len) for determinism. None when no
+        admissible bucket exists."""
         exact = bucket_key(
             cfg, n_slots=n_slots, max_len=max_len, page_size=page_size
         )
@@ -831,14 +901,13 @@ class BundleManifest:
         ):
             buckets = self._upgrade_legacy_index()["buckets"]
         want = parse_bucket_key(exact)
-        best: tuple[tuple[int, int, int], str] | None = None
+        wild = {"max_len": 0, "n_slots": 0, "prefill_len": 0}
+        best: tuple[tuple[int, int, int, int], str] | None = None
         for key, entry in buckets.items():
             got = parse_bucket_key(key)
             if got is None:
                 continue
-            if {**got, "max_len": 0, "n_slots": 0} != (
-                {**want, "max_len": 0, "n_slots": 0}
-            ):
+            if {**got, **wild} != {**want, **wild}:
                 continue
             if got["max_len"] < max_len or got["n_slots"] < n_slots:
                 continue
@@ -846,6 +915,7 @@ class BundleManifest:
                 self._unified_total(key, entry),
                 got["max_len"],
                 got["n_slots"],
+                got["prefill_len"] or 0,
             )
             if best is None or rank < best[0]:
                 best = (rank, key)

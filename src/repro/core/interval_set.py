@@ -39,7 +39,20 @@ from __future__ import annotations
 import bisect
 from typing import Any, Iterator
 
+try:  # the vectorized arena path wants numpy; the scalar engine does not
+    import numpy as _np
+except ImportError:  # pragma: no cover - numpy is a baked-in runtime dep
+    _np = None  # type: ignore[assignment]
+
 _INF = 1 << 60
+
+# Overlap count at which BestFitArena.find_offset switches from the
+# per-record Python gap scan to the numpy batch path. Dense graphs (long
+# activation lifetimes — the prefill regime) cross it and stay ~flat per
+# query; sparse decode graphs never do and keep the cheap tree walk. Per-
+# arena override via BestFitArena(vector_threshold=...): 0 forces the
+# vectorized path (differential tests), a huge value disables it.
+VECTOR_THRESHOLD = 1024
 
 _MASK64 = (1 << 64) - 1
 _GAMMA = 0x9E3779B97F4A7C15  # splitmix64 increment
@@ -95,6 +108,18 @@ class DisjointIntervalSet:
         if j < len(self._starts):
             best = min(best, self._starts[j] - last - 1)
         return best
+
+    def neighbors(self, first: int, last: int) -> tuple[int, int]:
+        """``(pred_end, succ_start)`` of the intervals flanking
+        ``[first, last]`` — which may itself be stored or merely storable
+        (disjoint from everything). Sentinels ``-_INF`` / ``_INF`` stand in
+        for a missing flank, so the pair always bounds the idle window
+        around the query."""
+        i = bisect.bisect_left(self._starts, first) - 1
+        pred = self._ends[i] if i >= 0 else -_INF
+        j = bisect.bisect_right(self._starts, last)
+        succ = self._starts[j] if j < len(self._starts) else _INF
+        return pred, succ
 
 
 class _Node:
@@ -222,22 +247,59 @@ class BestFitArena:
     (first such gap on ties), first-fit (``first_fit=True``) takes the
     lowest; either appends after the rightmost overlapping record when no
     gap fits.
+
+    Two byte-identical engines answer the same query. The scalar path
+    (tree walk + Python scan) wins when few placed records overlap the
+    query; once a query sees >= ``vector_threshold`` overlapping records
+    the next queries run the numpy batch path — one boolean lifetime mask
+    over all placed records, a ``lexsort`` by (offset, tensor_id), and a
+    prefix-max gap scan — whose per-query cost is a handful of
+    vectorized passes instead of m sort comparisons in Python. The
+    overlap count observed by either engine feeds the same estimate, so
+    an arena moves between them as its density changes and the choice
+    stays deterministic for a given placement sequence.
     """
 
-    __slots__ = ("offsets", "total", "first_fit", "_tree")
+    __slots__ = (
+        "offsets", "total", "first_fit", "vector_threshold", "_tree",
+        "_rows", "_n", "_firsts", "_lasts", "_offs", "_sizes", "_ids",
+        "_last_overlap",
+    )
 
-    def __init__(self, *, first_fit: bool = False):
+    def __init__(
+        self, *, first_fit: bool = False, vector_threshold: int | None = None
+    ):
         self.offsets: dict[int, int] = {}
         self.total = 0
         self.first_fit = first_fit
+        self.vector_threshold = (
+            VECTOR_THRESHOLD if vector_threshold is None else vector_threshold
+        )
         self._tree = IntervalTree()
+        # placement log: cheap append-only rows until the vector path
+        # first engages (sparse arenas never pay for columns they never
+        # query), then (offset, tensor_id)-sorted int64 numpy columns
+        # maintained incrementally
+        self._rows: list[tuple[int, int, int, int, int]] | None = []
+        self._n = 0
+        self._firsts = None
+        self._lasts = None
+        self._offs = None
+        self._sizes = None
+        self._ids = None
+        self._last_overlap = 0
 
     def __len__(self) -> int:
         return len(self._tree)
 
     def find_offset(self, rec) -> int:
         """The offset ``rec`` would get; does not place it."""
+        if _np is not None and self._last_overlap >= self.vector_threshold:
+            if self._rows is not None:
+                self._build_columns()
+            return self._find_offset_vector(rec)
         over = self._tree.overlapping(rec.first_op, rec.last_op)
+        self._last_overlap = len(over)
         offsets = self.offsets
         over.sort(key=lambda r: (offsets[r.tensor_id], r.tensor_id))
         prev = 0
@@ -258,6 +320,38 @@ class BestFitArena:
                 prev = end
         return prev if best is None else best
 
+    def _find_offset_vector(self, rec) -> int:
+        """Numpy twin of the scalar gap scan. The columns are kept sorted
+        by (offset, tensor_id) at insertion time, so the lifetime-masked
+        compress is already in the scalar scan order — no per-query sort.
+        Same running ``prev`` (a shifted prefix-max of placement ends —
+        every end is positive, so max(0, ...) is the prefix-max itself),
+        same first-occurrence tie-breaks (``argmin``/first candidate)."""
+        np = _np
+        n = self._n
+        if n == 0:
+            self._last_overlap = 0
+            return 0
+        mask = (self._firsts[:n] <= rec.last_op) & (
+            self._lasts[:n] >= rec.first_op
+        )
+        m = int(np.count_nonzero(mask))
+        self._last_overlap = m
+        if m == 0:
+            return 0
+        offs = self._offs[:n][mask]
+        cum = np.maximum.accumulate(offs + self._sizes[:n][mask])
+        prev = np.empty(m, np.int64)
+        prev[0] = 0
+        prev[1:] = cum[:-1]
+        gaps = offs - prev
+        cand = np.flatnonzero(gaps >= rec.size)
+        if cand.size == 0:
+            return int(cum[-1])
+        if self.first_fit:
+            return int(prev[cand[0]])
+        return int(prev[cand[np.argmin(gaps[cand])]])
+
     def place(self, rec) -> int:
         """Find the gap for ``rec``, place it there, return its offset."""
         off = self.find_offset(rec)
@@ -268,6 +362,63 @@ class BestFitArena:
         """Record ``rec`` at a caller-chosen offset (fixed placements)."""
         self.offsets[rec.tensor_id] = off
         self._tree.insert(rec.first_op, rec.last_op, rec)
+        if self._rows is not None:
+            self._rows.append(
+                (rec.first_op, rec.last_op, off, rec.size, rec.tensor_id)
+            )
+        else:
+            self._append_column(rec, off)
         end = off + rec.size
         if end > self.total:
             self.total = end
+
+    def _build_columns(self) -> None:
+        """One-time switch from the append-only log to sorted columns,
+        at the first vector-path query."""
+        rows = self._rows
+        assert rows is not None
+        self._rows = None
+        self._n = len(rows)
+        if not rows:
+            return
+        cols = _np.asarray(rows, _np.int64).T
+        order = _np.lexsort((cols[4], cols[2]))
+        self._firsts = _np.ascontiguousarray(cols[0][order])
+        self._lasts = _np.ascontiguousarray(cols[1][order])
+        self._offs = _np.ascontiguousarray(cols[2][order])
+        self._sizes = _np.ascontiguousarray(cols[3][order])
+        self._ids = _np.ascontiguousarray(cols[4][order])
+
+    def _append_column(self, rec, off: int) -> None:
+        """Insert the placement into the columns at its (offset,
+        tensor_id) rank — a searchsorted + one vectorized shift per
+        column, so vector queries never sort."""
+        n = self._n
+        if self._firsts is None:
+            cap = 256
+            self._firsts = _np.empty(cap, _np.int64)
+            self._lasts = _np.empty(cap, _np.int64)
+            self._offs = _np.empty(cap, _np.int64)
+            self._sizes = _np.empty(cap, _np.int64)
+            self._ids = _np.empty(cap, _np.int64)
+        elif n + 1 > len(self._firsts):
+            for name in ("_firsts", "_lasts", "_offs", "_sizes", "_ids"):
+                old = getattr(self, name)
+                new = _np.empty(2 * n, _np.int64)
+                new[:n] = old[:n]
+                setattr(self, name, new)
+        lo = int(_np.searchsorted(self._offs[:n], off, side="left"))
+        hi = int(_np.searchsorted(self._offs[:n], off, side="right"))
+        pos = lo + int(
+            _np.searchsorted(self._ids[lo:hi], rec.tensor_id, side="left")
+        )
+        for arr, val in (
+            (self._firsts, rec.first_op),
+            (self._lasts, rec.last_op),
+            (self._offs, off),
+            (self._sizes, rec.size),
+            (self._ids, rec.tensor_id),
+        ):
+            arr[pos + 1 : n + 1] = arr[pos:n]
+            arr[pos] = val
+        self._n = n + 1

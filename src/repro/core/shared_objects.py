@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import heapq
 from typing import Callable, Sequence
 
 from repro.core.interval_set import DisjointIntervalSet
@@ -229,16 +230,28 @@ def _stages_by_positional_maximums(
     distinct positional-maximum values, descending. Stage 2i collects
     tensors with size == pm_i; stage 2i+1 those with pm_{i+1} < size < pm_i.
     (Equivalently: group by the interval of pm values the size falls in.)
+
+    One pointer walk over the size-descending record order — every record
+    size is <= pm_0 (each tensor is live somewhere, so the global maximum
+    size IS a positional maximum), so peeling the == and the in-between
+    runs per pm is an exact linear merge of the oracle's per-pm filters.
     """
     pms = sorted(set(positional_maximums(records)), reverse=True)
     recs = sorted(records, key=lambda r: (-r.size, r.first_op, r.tensor_id))
     stages: list[list[TensorUsageRecord]] = []
-    for i, pm in enumerate(pms):
-        eq = [r for r in recs if r.size == pm]
+    i, n = 0, len(recs)
+    for k, pm in enumerate(pms):
+        eq: list[TensorUsageRecord] = []
+        while i < n and recs[i].size == pm:
+            eq.append(recs[i])
+            i += 1
         if eq:
             stages.append(eq)
-        lo = pms[i + 1] if i + 1 < len(pms) else 0
-        mid = [r for r in recs if lo < r.size < pm]
+        lo = pms[k + 1] if k + 1 < len(pms) else 0
+        mid: list[TensorUsageRecord] = []
+        while i < n and lo < recs[i].size < pm:
+            mid.append(recs[i])
+            i += 1
         if mid:
             stages.append(mid)
     return stages
@@ -271,39 +284,120 @@ def greedy_by_size_improved(
 def _greedy_by_size_improved_staged(
     records: Sequence[TensorUsageRecord],
 ) -> SharedObjectsAssignment:
-    # Pair selection scans (pending × objects) like the oracle — the
-    # iteration order IS the tie-break rule — but each fits/gap probe is
-    # one bisect instead of an interval walk.
     asn = _new_assignment("greedy_by_size_improved")
     for stage in _stages_by_positional_maximums(records):
-        pending = list(stage)
-        while pending:
-            best_pair: tuple[int, TensorUsageRecord, SharedObject] | None = None
-            for rec in pending:
-                for obj in asn.objects:
-                    # Same suitability as greedy_by_size plus: within a
-                    # stage sizes are ~equal, but we must never shrink an
-                    # object below an assigned tensor — growing is fine.
-                    if not obj.fits(rec):
-                        continue
-                    gap = obj.gap_to(rec)
-                    if best_pair is None or gap < best_pair[0]:
-                        best_pair = (gap, rec, obj)
-            if best_pair is None:
-                # No suitable existing object for any pending tensor:
-                # open a new object for the largest pending tensor, then
-                # resume pairing (remaining tensors may now fit it).
-                pending.sort(key=lambda r: (-r.size, r.first_op, r.tensor_id))
-                rec = pending.pop(0)
-                obj = _create_object(asn, rec)
-                obj.assign(rec)
-                asn.assignment[rec.tensor_id] = obj.object_id
-            else:
-                _, rec, obj = best_pair
-                obj.assign(rec)
-                asn.assignment[rec.tensor_id] = obj.object_id
-                pending.remove(rec)
+        _assign_stage_pairs(asn, stage)
     return asn
+
+
+def _assign_stage_pairs(
+    asn: SharedObjectsAssignment, stage: list[TensorUsageRecord]
+) -> None:
+    """One §4.4 stage through a lazily-invalidated min-heap of
+    (gap, pending rank, object id) pairs instead of the oracle's full
+    (pending x objects) rescan per assignment.
+
+    Why the heap order IS the oracle's tie-break: the oracle scans pending
+    in list order and ``asn.objects`` in id order, replacing only on a
+    strictly smaller gap — its pick is the lexicographic minimum over
+    (gap, pending position, object id). The stage list arrives sorted by
+    ``(-size, first_op, tensor_id)`` and the oracle's in-stage re-sort
+    uses the same key (a stable no-op), so pending position == rank in
+    ``stage``, and the heap's tuple order reproduces the pick exactly.
+
+    Why lazy invalidation is sound: an object only ever GAINS intervals,
+    so a pair's gap is non-increasing over a stage (and ``fits`` never
+    flips back to True). Every gap change is caused by an insertion into
+    the pair's enclosing idle window, and each insertion re-pushes exact
+    entries for exactly the pending records inside the two windows it
+    split — so every live pair always has one exact entry queued, stale
+    entries are strictly gap-high, and a popped entry whose stored gap no
+    longer matches can be discarded outright.
+    """
+    n = len(stage)
+    if not n:
+        return
+    alive = [True] * n
+    n_alive = n
+    # window index: ranks ordered by first_op (ties by rank), so "pending
+    # records fully inside an idle window" is one bisect + a bounded scan
+    by_first = sorted(range(n), key=lambda r: (stage[r].first_op, r))
+    first_keys = [stage[r].first_op for r in by_first]
+    heap: list[tuple[int, int, int]] = []
+    objs = asn.objects
+
+    def push_window(obj: SharedObject, lo: int, hi: int) -> None:
+        # exact-gap entries for every alive record fully inside the open
+        # idle window (lo, hi) of ``obj`` (sentinel-bounded at the edges)
+        i = bisect.bisect_right(first_keys, lo)
+        oid = obj.object_id
+        while i < len(first_keys) and first_keys[i] < hi:
+            r = by_first[i]
+            if alive[r]:
+                rec = stage[r]
+                if rec.last_op < hi:
+                    heapq.heappush(heap, (obj.gap_to(rec), r, oid))
+            i += 1
+
+    if objs:
+        # Seed pairs against the objects earlier stages built. Two exact
+        # enumerations of the same fitting pairs — pick the cheaper side:
+        # rec-major probes every (rec, object) once; window-major walks
+        # each object's idle windows (better when objects carry many
+        # intervals and the stage is small).
+        n_windows = sum(len(o.interval_set) + 1 for o in objs)
+        if n * len(objs) <= n_windows:
+            for r in range(n):
+                rec = stage[r]
+                for obj in objs:
+                    if obj.fits(rec):
+                        heapq.heappush(
+                            heap, (obj.gap_to(rec), r, obj.object_id)
+                        )
+        else:
+            for obj in objs:
+                lo = -(1 << 60)
+                for start, end, _ in obj.interval_set:
+                    push_window(obj, lo, start)
+                    lo = end
+                push_window(obj, lo, 1 << 60)
+
+    rank_ptr = 0  # lowest possibly-alive rank (ranks die monotonically
+    #               under the no-pair branch; heap picks can skip around)
+    while n_alive:
+        picked: tuple[int, SharedObject] | None = None
+        while heap:
+            gap, r, oid = heapq.heappop(heap)
+            if not alive[r]:
+                continue
+            obj = objs[oid]
+            rec = stage[r]
+            if not obj.fits(rec):
+                continue
+            if obj.gap_to(rec) != gap:
+                continue  # stale-high; the exact entry is still queued
+            picked = (r, obj)
+            break
+        if picked is None:
+            # No suitable existing object for any pending tensor: open a
+            # new object for the largest pending tensor (== lowest alive
+            # rank), then resume pairing (remaining tensors may fit it).
+            while not alive[rank_ptr]:
+                rank_ptr += 1
+            r = rank_ptr
+            rec = stage[r]
+            obj = _create_object(asn, rec)
+        else:
+            r, obj = picked
+            rec = stage[r]
+        obj.assign(rec)
+        asn.assignment[rec.tensor_id] = obj.object_id
+        alive[r] = False
+        n_alive -= 1
+        if n_alive:
+            lo, hi = obj.interval_set.neighbors(rec.first_op, rec.last_op)
+            push_window(obj, lo, rec.first_op)
+            push_window(obj, rec.last_op, hi)
 
 
 def from_slot_log(

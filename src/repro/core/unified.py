@@ -586,6 +586,14 @@ class PlanSpec:
     graph: "Graph | None" = None
     records: Sequence[TensorUsageRecord] | None = None
     state_records: Sequence[StateRecord] | None = None
+    # prefill half (optional): the full-sequence forward graph at
+    # ``prefill_len`` tokens — long activation lifetimes, the regime where
+    # the paper's strategies diverge most. Planned with the same strategy
+    # portfolio as the decode half (no order/fusion search — the search
+    # knobs target the decode graph); ``prefill_len`` joins the bucketed
+    # fingerprint (None-canonicalized, so decode-only specs are unchanged)
+    prefill_graph: "Graph | None" = None
+    prefill_len: int | None = None
     # bucket identity
     cfg: "ArchConfig | None" = None
     n_slots: int | None = None
@@ -640,6 +648,10 @@ class UnifiedPlan:
     provenance: dict = dataclasses.field(default_factory=dict)
     # search by-products; never serialized (bundles keep provenance only)
     search: SearchOutcome | None = None
+    # planned prefill activation arena (PlanSpec.prefill_graph) — never
+    # summed into total_size: prefill and decode are temporally disjoint,
+    # so the prefill arena aliases the decode arena's address space
+    prefill: "MemoryPlan | None" = None
 
     @property
     def total_size(self) -> int:
@@ -649,6 +661,14 @@ class UnifiedPlan:
         if self.state is not None:
             total += self.state.total_size
         return total
+
+    @property
+    def peak_activation_size(self) -> int:
+        """Peak transient-arena demand across both phases (decode step vs
+        full-sequence prefill, whichever arena is larger)."""
+        act = self.activation.total_size if self.activation else 0
+        pre = self.prefill.total_size if self.prefill else 0
+        return max(act, pre)
 
     def arena_layouts(self) -> "tuple[ArenaLayout | None, ArenaLayout | None]":
         """Materialization view: (activation layout, state layout) — both
@@ -670,6 +690,8 @@ class UnifiedPlan:
             lines.append(self.activation.summary())
         if self.state is not None:
             lines.append(self.state.summary())
+        if self.prefill is not None:
+            lines.append(f"prefill {self.prefill.summary()}")
         lines.append(
             f"unified footprint: {self.total_size / 2**20:.3f} MiB "
             f"[{self.fingerprint[:12]}]"
@@ -699,6 +721,8 @@ def _spec_fingerprint(spec: PlanSpec, records, state_records) -> str:
     if spec.page_size:
         payload["page_size"] = spec.page_size
         payload["page_pool"] = spec.page_pool
+    if spec.prefill_len:
+        payload["prefill_len"] = spec.prefill_len
     text = json.dumps(payload, sort_keys=True, separators=(",", ":"))
     return hashlib.sha256(text.encode()).hexdigest()
 
@@ -793,6 +817,21 @@ def plan(spec: PlanSpec) -> UnifiedPlan:
         if spec.graph is not None:
             provenance["graph_ops"] = len(spec.graph.ops)
 
+    prefill: "MemoryPlan | None" = None
+    if spec.prefill_graph is not None:
+        prefill = planner._plan_records_impl(
+            spec.prefill_graph.usage_records(spec.alignment),
+            mode=spec.mode,
+            strategy=spec.strategy,
+            graph_name=spec.prefill_graph.name,
+            cache=spec.cache,
+            use_cache=spec.use_cache,
+        )
+        provenance["prefill_total_bytes"] = prefill.total_size
+        provenance["prefill_records"] = len(prefill.records)
+        if spec.prefill_len:
+            provenance["prefill_len"] = spec.prefill_len
+
     state: StatePlan | None = None
     if spec.state_records is not None:
         if spec.n_slots is None or spec.max_len is None:
@@ -829,6 +868,7 @@ def plan(spec: PlanSpec) -> UnifiedPlan:
         fingerprint = decode_fingerprint(
             spec.cfg, n_slots=spec.n_slots, max_len=spec.max_len,
             serve_params=spec.serve_params,
+            prefill_len=spec.prefill_len,
         )
     else:
         fingerprint = _spec_fingerprint(spec, records, spec.state_records)
@@ -841,6 +881,7 @@ def plan(spec: PlanSpec) -> UnifiedPlan:
         fusion_groups=groups,
         provenance=provenance,
         search=outcome,
+        prefill=prefill,
     )
 
 
@@ -1000,9 +1041,14 @@ class PlanSession:
             )
         verify_len = bundle.max_len if nearest else max_len
         verify_slots = bundle.n_slots if nearest else n_slots
+        # a prefill-carrying bundle verifies against its OWN prefill_len
+        # (the prefill plan is inert extra metadata on the decode path,
+        # exactly like a longer max_len under nearest selection); v3-shim
+        # and decode-only bundles carry 0 → None-canonicalized away
         expect = artifact.decode_fingerprint(
             cfg, n_slots=verify_slots, max_len=verify_len,
             serve_params=serve_params,
+            prefill_len=bundle.prefill_len or None,
         )
         if bundle.fingerprint != expect:
             return Resolution(

@@ -32,8 +32,11 @@ The offline half of the compile→artifact→serve pipeline. For one
    serialization, ``analysis/decode_lint.lint_executables``) before
    publish. ``--no-aot`` skips this step (smaller bundles, lazy-compile
    serving);
-5. publishes a versioned, fingerprinted v3
-   :class:`~repro.core.artifact.PlanBundle` carrying all of the above
+5. publishes a versioned, fingerprinted v4
+   :class:`~repro.core.artifact.PlanBundle` carrying all of the above —
+   plus, under ``--prefill-len``, the planned full-sequence *prefill*
+   activation arena (the long-lifetime regime; the prefill shape joins
+   the fingerprint and the bucket key) —
    into a content-addressed manifest directory that
    ``InferenceEngine(session=PlanSession.from_manifest(dir))`` /
    ``launch/serve.py --plan-bundle`` serve from without tracing,
@@ -84,7 +87,7 @@ from repro.core.unified import (
     plan as plan_unified,
     state_records_from_pytree,
 )
-from repro.models.api import Model
+from repro.models.api import Model, ShapeSpec
 from repro.trace.jaxpr_liveness import trace_graph
 
 DEFAULT_BUNDLE_DIR = "plan_artifacts"
@@ -153,6 +156,36 @@ def trace_decode_graph(
     return trace_graph(decode, *specs, name=f"{cfg.name}-decode")
 
 
+def _prefill_specs(cfg: ArchConfig, *, prefill_len: int):
+    """(prefill_fn, shape-level args) for the full-sequence prefill of ONE
+    request (batch 1 — the engine fills slots one request at a time).
+    Works through ``Model.input_specs(kind="prefill")``, so modality
+    frontends (prefix embeds, audio frames) are covered uniformly."""
+    if prefill_len < 1:
+        raise ValueError(f"prefill_len must be >= 1, got {prefill_len}")
+    model = Model.for_config(cfg)
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda: model.init(key))
+    batch = model.input_specs(
+        ShapeSpec(f"prefill_{prefill_len}", prefill_len, 1, "prefill")
+    )
+
+    def prefill(p, b):
+        return model.prefill(p, b)
+
+    return prefill, (params, batch)
+
+
+def trace_prefill_graph(cfg: ArchConfig, *, prefill_len: int) -> Graph:
+    """Shape-level trace of the full-sequence prefill at ``prefill_len``
+    tokens — the long-activation-lifetime regime the paper's strategies
+    are strongest in. Same aval-only contract as the decode trace."""
+    prefill, specs = _prefill_specs(cfg, prefill_len=prefill_len)
+    return trace_graph(
+        prefill, *specs, name=f"{cfg.name}-prefill{prefill_len}"
+    )
+
+
 def _measure_xla_temp(
     cfg: ArchConfig, *, n_slots: int, max_len: int
 ) -> int | None:
@@ -185,6 +218,7 @@ def compile_decode_plan(
     top_k: int = 0,
     page_size: int | None = None,
     page_pool: int | None = None,
+    prefill_len: int | None = None,
     lint: bool = True,
     aot: bool = True,
 ) -> CompileResult:
@@ -197,7 +231,13 @@ def compile_decode_plan(
     scan-block path self-invalidates against a default host-loop engine
     and vice versa. The planned layouts themselves do not change — the
     decode body traced for planning is the same graph the scan body
-    iterates."""
+    iterates.
+
+    ``prefill_len`` additionally traces and plans the full-sequence
+    prefill activation arena at that many tokens; the bundle then carries
+    both transient plans (the prefill arena aliases the decode arena —
+    the phases never overlap in time) and ``prefill_len`` joins the
+    fingerprint and the bucket key (``|pf{S}``)."""
     wall0 = time.perf_counter()
     serve_params = serve_fingerprint(
         block_size=block_size, greedy=greedy,
@@ -208,6 +248,10 @@ def compile_decode_plan(
     graph = trace_graph(decode, *specs, name=f"{cfg.name}-decode")
     # the shape-level cache pytree (specs[2]) feeds the cross-step half
     state_records = state_records_from_pytree(specs[2], n_slots=n_slots)
+    prefill_graph = (
+        trace_prefill_graph(cfg, prefill_len=prefill_len)
+        if prefill_len else None
+    )
 
     unified = plan_unified(PlanSpec(
         graph=graph,
@@ -223,6 +267,8 @@ def compile_decode_plan(
         cache=cache,
         page_size=page_size,
         page_pool=page_pool,
+        prefill_graph=prefill_graph,
+        prefill_len=prefill_len,
         state_token_axes=(
             detect_state_axes(
                 Model.for_config(cfg).init_cache,
@@ -259,6 +305,8 @@ def compile_decode_plan(
         order=unified.order,
         fusion_groups=unified.fusion_groups,
         provenance=provenance,
+        prefill_plan=unified.prefill,
+        prefill_len=prefill_len or 0,
     )
     if lint:
         # the pre-publish gate: soundness certification (sweep-line,
@@ -280,7 +328,7 @@ def compile_decode_plan(
             raise LintGateError(
                 report,
                 context=f"refusing to publish "
-                f"{bucket_key(cfg, n_slots=n_slots, max_len=max_len, page_size=page_size)}",
+                f"{bucket_key(cfg, n_slots=n_slots, max_len=max_len, page_size=page_size, prefill_len=prefill_len)}",
             )
     if aot:
         # behind the lint gate on purpose: an unsound plan is refused
@@ -315,7 +363,7 @@ def compile_decode_plan(
                 raise LintGateError(
                     report,
                     context=f"refusing to publish AOT executables for "
-                    f"{bucket_key(cfg, n_slots=n_slots, max_len=max_len, page_size=page_size)}",
+                    f"{bucket_key(cfg, n_slots=n_slots, max_len=max_len, page_size=page_size, prefill_len=prefill_len)}",
                 )
     outcome = unified.search
     return CompileResult(
@@ -341,7 +389,8 @@ def compile_and_publish(
     res = compile_decode_plan(cfg, n_slots=n_slots, max_len=max_len, **kwargs)
     BundleManifest(out_dir).publish(
         bucket_key(cfg, n_slots=n_slots, max_len=max_len,
-                   page_size=kwargs.get("page_size")),
+                   page_size=kwargs.get("page_size"),
+                   prefill_len=kwargs.get("prefill_len")),
         res.bundle,
         command=command,
     )
@@ -358,20 +407,36 @@ def sweep_buckets(
     dtypes: list[str] | None = None,
     command: str | None = None,
     emit=print,
+    explicit_archs: bool = False,
+    dropped: list | None = None,
     **kwargs,
 ) -> list[CompileResult]:
     """The fleet sweep behind ``--all``: every (arch × slots × max_len ×
-    dtype) bucket into ONE manifest. Audio (encoder-decoder) archs are
-    skipped — the engine drives decoder-only archs. Plans are shared
-    through one PlanCache across the sweep, so buckets differing only in
-    max_len reuse each other's strategy runs when their record sets
-    coincide."""
+    dtype) bucket into ONE manifest. Plans are shared through one
+    PlanCache across the sweep, so buckets differing only in max_len
+    reuse each other's strategy runs when their record sets coincide.
+
+    No silent caps: every arch or bucket the sweep drops is logged with
+    its reason (and collected into ``dropped`` when the caller passes a
+    list — ``(what, reason)`` pairs), and the sweep ends with a one-line
+    drop summary. Audio (encoder-decoder) archs are skipped by default —
+    the decode compile path targets decoder-only serving — but an
+    explicit ``--archs`` listing (``explicit_archs=True``) opts them in:
+    the sweep then *attempts* the compile so the drop reason is the real
+    failure, not a guess, and audio archs start sweeping the moment the
+    decode path learns to plan them."""
     cache = kwargs.pop("cache", None) or PlanCache()
     results: list[CompileResult] = []
+    drops: list[tuple[str, str]] = dropped if dropped is not None else []
     for arch in archs:
         base = get_config(arch) if full else get_reduced(arch)
-        if base.family == "audio":
-            emit(f"skip {arch}: audio arch (no decode-only serving path)")
+        if base.family == "audio" and not explicit_archs:
+            reason = (
+                "audio (encoder-decoder) arch — decode compile path is "
+                "decoder-only; pass it via --archs to attempt anyway"
+            )
+            drops.append((arch, reason))
+            emit(f"skip {arch}: {reason}")
             continue
         for dtype in dtypes or [base.dtype]:
             cfg = (
@@ -380,16 +445,33 @@ def sweep_buckets(
             )
             for n_slots in slots_list:
                 for max_len in max_lens:
-                    res = compile_and_publish(
-                        cfg, out_dir, n_slots=n_slots, max_len=max_len,
-                        command=command, cache=cache, **kwargs,
+                    key = bucket_key(
+                        cfg, n_slots=n_slots, max_len=max_len,
+                        page_size=kwargs.get("page_size"),
+                        prefill_len=kwargs.get("prefill_len"),
                     )
+                    try:
+                        res = compile_and_publish(
+                            cfg, out_dir, n_slots=n_slots, max_len=max_len,
+                            command=command, cache=cache, **kwargs,
+                        )
+                    except NotImplementedError as e:
+                        # un-plannable arch (today: audio opted in via an
+                        # explicit --archs) — drop THE BUCKET, loudly
+                        drops.append((key, str(e)))
+                        emit(f"skip {key}: {e}")
+                        continue
                     emit(
-                        f"{bucket_key(cfg, n_slots=n_slots, max_len=max_len, page_size=kwargs.get('page_size'))}"
+                        f"{key}"
                         f": {res.bundle.total_size / 2**20:.3f} MiB unified "
                         f"({res.wall_s:.2f}s)"
                     )
                     results.append(res)
+    if drops:
+        emit(
+            f"dropped {len(drops)} arch(es)/bucket(s): "
+            + ", ".join(what for what, _ in drops)
+        )
     return results
 
 
@@ -437,6 +519,11 @@ def main() -> None:
     ap.add_argument("--page-pool", type=int, default=None,
                     help="physical pool page count for --page-size "
                          "(default: n_slots x pages-per-slot)")
+    ap.add_argument("--prefill-len", type=int, default=None,
+                    help="ALSO trace + plan the full-sequence prefill "
+                         "activation arena at this many tokens (joins the "
+                         "fingerprint and the bucket key as |pf{S}); "
+                         "default: decode-only bundle")
     ap.add_argument("--no-lint", action="store_true",
                     help="skip the pre-publish static-analysis gate "
                          "(soundness certifier + bundle self-lint)")
@@ -465,14 +552,18 @@ def main() -> None:
             block_size=args.block_size, greedy=not args.sample,
             temperature=args.temperature, top_k=args.top_k,
             page_size=args.page_size, page_pool=args.page_pool,
+            prefill_len=args.prefill_len,
             lint=not args.no_lint, aot=not args.no_aot,
             command=command,
+            explicit_archs=args.archs is not None,
+            dropped=(dropped := []),
         )
         print(f"published {len(results)} bucket(s) to {args.out}/")
         if args.json:
             print(json.dumps({
                 "buckets": len(results),
                 "unified_total_bytes": [r.bundle.total_size for r in results],
+                "dropped": dropped,
                 "wall_s": round(sum(r.wall_s for r in results), 3),
             }))
         return
@@ -486,12 +577,13 @@ def main() -> None:
         block_size=args.block_size, greedy=not args.sample,
         temperature=args.temperature, top_k=args.top_k,
         page_size=args.page_size, page_pool=args.page_pool,
+        prefill_len=args.prefill_len,
         lint=not args.no_lint, aot=not args.no_aot,
         command=command,
     )
     print(res.summary())
     print(f"published to {args.out}/ "
-          f"(bucket {bucket_key(cfg, n_slots=args.slots, max_len=args.max_len, page_size=args.page_size)})")
+          f"(bucket {bucket_key(cfg, n_slots=args.slots, max_len=args.max_len, page_size=args.page_size, prefill_len=args.prefill_len)})")
     if args.json:
         print(json.dumps({
             "arch": args.arch,
@@ -499,6 +591,11 @@ def main() -> None:
             "n_slots": args.slots,
             "max_len": args.max_len,
             "page_size": args.page_size,
+            "prefill_len": args.prefill_len,
+            "prefill_total_bytes": (
+                res.bundle.prefill_plan.total_size
+                if res.bundle.prefill_plan else None
+            ),
             "greedy_total_bytes": res.greedy_plan.total_size,
             "bundle_total_bytes": res.bundle.plan.total_size,
             "state_total_bytes": (

@@ -219,10 +219,18 @@ def test_bucket_key_parses_and_rebuilds():
     assert parsed == {
         "arch": cfg.name, "n_layers": cfg.n_layers, "d_model": cfg.d_model,
         "n_slots": 2, "max_len": 64, "dtype": cfg.dtype,
-        "page_size": None,
+        "page_size": None, "prefill_len": None,
     }
     paged_key = bucket_key(cfg, n_slots=2, max_len=64, page_size=1024)
     assert parse_bucket_key(paged_key)["page_size"] == 1024
+    pf_key = bucket_key(cfg, n_slots=2, max_len=64, prefill_len=48)
+    assert pf_key.endswith("|pf48")
+    assert parse_bucket_key(pf_key)["prefill_len"] == 48
+    both = bucket_key(cfg, n_slots=2, max_len=64, page_size=1024,
+                      prefill_len=48)
+    parsed_both = parse_bucket_key(both)
+    assert parsed_both["page_size"] == 1024
+    assert parsed_both["prefill_len"] == 48
     assert parse_bucket_key("free-form-key") is None
     assert bundle_bucket_key(_bundle(cfg)) == key
 

@@ -1,0 +1,189 @@
+"""Fast-path engagement tests for full-scale planning.
+
+The 220-graph differential harness (``test_differential_planner``) runs
+the production strategies at their DEFAULT thresholds, where the corpus
+record sets are small enough that the vectorized arena engine never
+engages. These tests force each engine explicitly:
+
+* the numpy batch gap search (``BestFitArena(vector_threshold=0)``) must
+  be byte-identical to the scalar tree walk over the whole corpus, for
+  every offsets strategy and for raw arena placement sequences;
+* the heap-based ``greedy_by_size_improved`` stage loop must survive the
+  adversarial shapes its tie-breaking proof leans on (mass size ties,
+  one single positional-maximum stage);
+* 0-byte records are rejected at the record type itself, so neither the
+  fast paths nor the frozen oracle can diverge on them (rejection
+  parity by construction);
+* an optional hypothesis property test re-states scalar-vs-vectorized
+  equality over the generator families, plus a seeded random variant
+  that runs even without hypothesis installed.
+"""
+
+import random
+
+import pytest
+
+from graph_gen import GENERATORS, generate
+from repro.core import baselines, interval_set, offsets, reference, shared_objects
+from repro.core.interval_set import BestFitArena
+from repro.core.records import TensorUsageRecord
+
+N_SEEDS = 55  # same corpus shape as test_differential_planner: 4 x 55
+
+CASES = [(kind, seed) for kind in sorted(GENERATORS) for seed in range(N_SEEDS)]
+
+OFFSET_STRATEGIES = {
+    "greedy_by_size": offsets.greedy_by_size_offsets,
+    "greedy_by_breadth": offsets.greedy_by_breadth_offsets,
+    "strip_packing_bestfit": baselines.strip_packing_bestfit,
+    "tflite_greedy_in_order": baselines.tflite_greedy_in_order_offsets,
+}
+
+
+def _arena_trace(recs, *, vector_threshold, first_fit=False):
+    """Placement-order offsets + running totals for one arena engine."""
+    arena = BestFitArena(
+        first_fit=first_fit, vector_threshold=vector_threshold
+    )
+    trace = []
+    for rec in recs:
+        arena.place(rec)
+        trace.append((rec.tensor_id, arena.offsets[rec.tensor_id], arena.total))
+    return trace
+
+
+def _assert_engines_match(recs, tag):
+    big = 1 << 30  # scalar engine only
+    for first_fit in (False, True):
+        scalar = _arena_trace(recs, vector_threshold=big, first_fit=first_fit)
+        vector = _arena_trace(recs, vector_threshold=0, first_fit=first_fit)
+        assert scalar == vector, (
+            f"{tag} first_fit={first_fit}: vectorized arena diverged"
+        )
+
+
+@pytest.mark.parametrize("kind,seed", CASES)
+def test_vectorized_arena_corpus_byte_equality(kind, seed, monkeypatch):
+    """Every offsets strategy, full corpus: forcing the numpy engine on
+    from the first query must reproduce the scalar result exactly."""
+    recs = generate(kind, seed)
+    monkeypatch.setattr(interval_set, "VECTOR_THRESHOLD", 1 << 30)
+    scalar = {
+        name: fn(recs) for name, fn in OFFSET_STRATEGIES.items()
+    }
+    monkeypatch.setattr(interval_set, "VECTOR_THRESHOLD", 0)
+    for name, fn in OFFSET_STRATEGIES.items():
+        got = fn(recs)
+        want = scalar[name]
+        assert got.offsets == want.offsets, f"{name} {kind}/{seed}"
+        assert got.total_size == want.total_size, f"{name} {kind}/{seed}"
+
+
+@pytest.mark.parametrize("kind", sorted(GENERATORS))
+def test_vectorized_arena_placement_traces(kind):
+    """Raw arena API, both fit policies: per-placement offsets and
+    running totals are identical between engines (stronger than final
+    assignments — divergence is pinned to the first bad placement)."""
+    for seed in range(8):
+        recs = generate(kind, seed)
+        _assert_engines_match(recs, f"{kind}/{seed}")
+
+
+def test_vectorized_arena_mid_stream_handoff():
+    """An arena that crosses the engagement threshold mid-sequence (the
+    production path: scalar while sparse, vectorized once dense) must
+    match the always-scalar trace too."""
+    recs = generate("uniform", 3) + generate("ties", 4)
+    recs = [
+        TensorUsageRecord(r.first_op, r.last_op, r.size, tensor_id=i)
+        for i, r in enumerate(recs)
+    ]
+    scalar = _arena_trace(recs, vector_threshold=1 << 30)
+    handoff = _arena_trace(recs, vector_threshold=4)
+    assert scalar == handoff
+
+
+def _equal_size_records(n=64, size=4096, seed=0):
+    rng = random.Random(seed)
+    recs = []
+    for i in range(n):
+        a = rng.randrange(n)
+        recs.append(
+            TensorUsageRecord(a, min(a + rng.randrange(1, 6), n), size, tensor_id=i)
+        )
+    return recs
+
+
+def test_heap_improved_many_equal_sizes():
+    """Mass size ties exercise the heap's secondary ordering: the oracle
+    breaks (gap, position, object) ties lexicographically, and equal
+    sizes make every candidate pair a near-tie."""
+    for seed in range(20):
+        recs = _equal_size_records(seed=seed)
+        fast = shared_objects.greedy_by_size_improved(recs)
+        oracle = reference.greedy_by_size_improved(recs)
+        assert fast.assignment == oracle.assignment, f"seed {seed}"
+        assert [o.size for o in fast.objects] == [
+            o.size for o in oracle.objects
+        ], f"seed {seed}"
+
+
+def test_heap_improved_single_stage():
+    """All records share one op, so there is exactly one positional
+    maximum — the whole problem is one stage and the heap loop must
+    drain it in oracle order."""
+    rng = random.Random(7)
+    recs = [
+        TensorUsageRecord(0, 1, rng.randrange(1, 64) * 64, tensor_id=i)
+        for i in range(128)
+    ]
+    fast = shared_objects.greedy_by_size_improved(recs)
+    oracle = reference.greedy_by_size_improved(recs)
+    assert fast.assignment == oracle.assignment
+    assert [o.size for o in fast.objects] == [o.size for o in oracle.objects]
+    # one stage, fully conflicting: every tensor needs its own object
+    assert len(fast.objects) == len(recs)
+
+
+def test_zero_byte_records_rejected_before_any_planner():
+    """Rejection parity by construction: size <= 0 never reaches either
+    implementation because the record type itself refuses it."""
+    with pytest.raises(ValueError):
+        TensorUsageRecord(0, 1, 0, tensor_id=0)
+    with pytest.raises(ValueError):
+        TensorUsageRecord(0, 1, -64, tensor_id=0)
+
+
+def test_scalar_vs_vectorized_random_property():
+    """Seeded random property sweep (always runs): arbitrary record
+    streams placed through both engines stay byte-identical."""
+    rng = random.Random(0xC0FFEE)
+    for case in range(40):
+        n = rng.randrange(2, 80)
+        n_ops = rng.randrange(2, 40)
+        recs = [
+            TensorUsageRecord(
+                a := rng.randrange(n_ops),
+                min(a + rng.randrange(0, 8), n_ops),
+                rng.randrange(1, 1 << 12) * 64,
+                tensor_id=i,
+            )
+            for i in range(n)
+        ]
+        _assert_engines_match(recs, f"random/{case}")
+
+
+def test_scalar_vs_vectorized_hypothesis_property():
+    """Hypothesis restatement of the same property over the generator
+    families (skips cleanly where hypothesis is not installed)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+
+    from graph_gen import hypothesis_records
+
+    @settings(max_examples=60, deadline=None)
+    @given(hypothesis_records())
+    def check(recs):
+        _assert_engines_match(recs, "hypothesis")
+
+    check()
